@@ -1,0 +1,102 @@
+"""Kernel microbenchmarks.
+
+CAVEAT: this container executes Pallas in interpret mode on CPU, so
+``us_per_call`` is structural-validation timing, NOT TPU performance.
+TPU performance is analyzed from the compiled dry-run (§Roofline); the
+numbers here certify correctness (max_err vs oracle) and give relative
+interpreter cost.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _time(fn, *args, n=3):
+    out = fn(*args)  # warmup/compile
+    jax.tree.map(lambda x: x.block_until_ready(), out)
+    t0 = time.time()
+    for _ in range(n):
+        out = fn(*args)
+        jax.tree.map(lambda x: x.block_until_ready(), out)
+    return (time.time() - t0) / n * 1e6
+
+
+def kernel_micro():
+    from repro.kernels.attn_importance.attn_importance import (
+        attn_with_importance)
+    from repro.kernels.attn_importance.ref import attn_with_importance_ref
+    from repro.kernels.decode_gqa.decode_gqa import decode_attention
+    from repro.kernels.decode_gqa.ref import decode_attention_ref
+    from repro.kernels.partial_prefill.partial_prefill import (
+        partial_prefill_attention)
+    from repro.kernels.partial_prefill.ref import partial_prefill_ref
+    from repro.kernels.ssd_scan.ssd_scan import ssd_scan
+    from repro.kernels.ssd_scan.ref import ssd_scan_ref
+
+    rows = []
+    key = jax.random.PRNGKey(0)
+
+    # attn + importance: SLM-scale
+    B, T, nh, nkv, hd = 1, 256, 8, 4, 64
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, T, nh, hd))
+    k = jax.random.normal(ks[1], (B, T, nkv, hd))
+    v = jax.random.normal(ks[2], (B, T, nkv, hd))
+    f = jax.jit(lambda q, k, v: attn_with_importance(q, k, v))
+    us = _time(f, q, k, v)
+    o2, i2 = attn_with_importance_ref(q, k, v)
+    o1, i1 = f(q, k, v)
+    err = max(float(jnp.abs(o1 - o2).max()), float(jnp.abs(i1 - i2).max()))
+    rows.append(dict(name="attn_importance", us_per_call=us, max_err=err,
+                     shape=f"B{B}xT{T}xh{nh}/{nkv}xd{hd}"))
+
+    # partial prefill: chunk 32 over 1k cache
+    B, C, S = 2, 32, 1024
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, C, nh, hd))
+    k = jax.random.normal(ks[1], (B, S, nkv, hd))
+    v = jax.random.normal(ks[2], (B, S, nkv, hd))
+    kp = np.full((B, S), -1, np.int32)
+    kp[:, :500] = np.arange(500)
+    qp = np.tile(500 + np.arange(C), (B, 1)).astype(np.int32)
+    kp[:, 500:500 + C] = qp
+    qp, kp = jnp.asarray(qp), jnp.asarray(kp)
+    f = jax.jit(lambda *a: partial_prefill_attention(*a, block_kv=256))
+    us = _time(f, q, k, v, qp, kp)
+    o1 = f(q, k, v, qp, kp)
+    o2 = partial_prefill_ref(q, k, v, qp, kp)
+    rows.append(dict(name="partial_prefill", us_per_call=us,
+                     max_err=float(jnp.abs(o1 - o2).max()),
+                     shape=f"B{B}xC{C}xS{S}"))
+
+    # decode GQA
+    q1 = jax.random.normal(ks[0], (B, nh, hd))
+    qpos = jnp.full((B,), 520, jnp.int32)
+    f = jax.jit(lambda *a: decode_attention(*a, block_kv=256))
+    us = _time(f, q1, k, v, qpos, kp)
+    o1 = f(q1, k, v, qpos, kp)
+    o2 = decode_attention_ref(q1, k, v, qpos, kp)
+    rows.append(dict(name="decode_gqa", us_per_call=us,
+                     max_err=float(jnp.abs(o1 - o2).max()),
+                     shape=f"B{B}xS{S}xh{nh}/{nkv}"))
+
+    # SSD scan
+    B, L, H, P, N = 1, 256, 4, 32, 16
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (B, L, H, P)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, L, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (B, L, N)) * 0.5
+    Cm = jax.random.normal(ks[4], (B, L, N)) * 0.5
+    f = jax.jit(lambda *a: ssd_scan(*a, chunk=64))
+    us = _time(f, x, dt, A, Bm, Cm)
+    y1, h1 = f(x, dt, A, Bm, Cm)
+    y2, h2 = ssd_scan_ref(x, dt, A, Bm, Cm, chunk=64)
+    rows.append(dict(name="ssd_scan", us_per_call=us,
+                     max_err=float(jnp.abs(y1 - y2).max()),
+                     shape=f"B{B}xL{L}xH{H}xP{P}xN{N}"))
+    return rows

@@ -1,0 +1,92 @@
+"""Assemble the §Dry-run / §Roofline tables of EXPERIMENTS.md from the
+results/dryrun/*.json records produced by repro.launch.dryrun.
+
+  PYTHONPATH=src:. python -m benchmarks.roofline_report [--tag base]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+
+
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k", "verify_32k"]
+
+
+def load(tag: str = "base", out_dir: str = "results/dryrun"):
+    recs = {}
+    for p in glob.glob(f"{out_dir}/*.json"):
+        r = json.load(open(p))
+        if r.get("tag", "") != tag:
+            continue
+        key = (r["arch"], r["shape"], r["mesh"])
+        recs[key] = r
+    return recs
+
+
+def fmt_e(x):
+    return f"{x:.2e}"
+
+
+def roofline_table(recs, mesh: str = "16x16") -> str:
+    lines = [
+        "| arch | shape | t_compute (s) | t_memory (s) | t_collective (s) "
+        "| bottleneck | useful-FLOP ratio |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for (arch, shape, m), r in sorted(recs.items()):
+        if m != mesh or not r.get("ok"):
+            continue
+        ro = r["roofline"]
+        lines.append(
+            f"| {arch} | {shape} | {fmt_e(ro['t_compute'])} | "
+            f"{fmt_e(ro['t_memory'])} | {fmt_e(ro['t_collective'])} | "
+            f"**{ro['bottleneck']}** | {ro['useful_flops_ratio']:.2f} |")
+    return "\n".join(lines)
+
+
+def dryrun_table(recs) -> str:
+    lines = [
+        "| arch | shape | mesh | compile (s) | FLOPs/dev | bytes/dev | "
+        "coll bytes/dev | temp GiB/dev | status |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for (arch, shape, m), r in sorted(recs.items()):
+        if not r.get("ok"):
+            lines.append(f"| {arch} | {shape} | {m} | - | - | - | - | - | "
+                         f"FAIL: {r.get('error', '?')[:60]} |")
+            continue
+        mem = r["memory"]["temp_bytes"] / 2 ** 30
+        lines.append(
+            f"| {arch} | {shape} | {m} | {r['compile_s']:.1f} | "
+            f"{fmt_e(r['flops_per_dev'])} | {fmt_e(r['bytes_per_dev'])} | "
+            f"{fmt_e(r['collective_bytes_per_dev'])} | {mem:.2f} | OK |")
+    return "\n".join(lines)
+
+
+def summarize(recs):
+    n_ok = sum(1 for r in recs.values() if r.get("ok"))
+    bottl = {}
+    for r in recs.values():
+        if r.get("ok"):
+            b = r["roofline"]["bottleneck"]
+            bottl[b] = bottl.get(b, 0) + 1
+    return n_ok, len(recs), bottl
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tag", default="base")
+    ap.add_argument("--out-dir", default="results/dryrun")
+    args = ap.parse_args()
+    recs = load(args.tag, args.out_dir)
+    n_ok, n, bottl = summarize(recs)
+    print(f"## records: {n_ok}/{n} OK; bottleneck histogram: {bottl}\n")
+    print("### Dry-run (both meshes)\n")
+    print(dryrun_table(recs))
+    print("\n### Roofline (single-pod 16x16)\n")
+    print(roofline_table(recs, "16x16"))
+
+
+if __name__ == "__main__":
+    main()

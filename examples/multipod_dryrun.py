@@ -1,0 +1,42 @@
+"""Lower + compile one (architecture x input shape) on the production
+mesh and print its roofline terms — the per-combination view of the full
+sweep in repro.launch.dryrun.
+
+  PYTHONPATH=src python examples/multipod_dryrun.py --arch glm4-9b \
+      --shape decode_32k [--multi-pod]
+"""
+# NOTE: must run as a fresh process — jax locks the device count on init.
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="glm4-9b")
+    ap.add_argument("--shape", default="decode_32k")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+
+    from repro.launch.dryrun import run_one
+    rec = run_one(args.arch, args.shape, multi_pod=args.multi_pod,
+                  out_dir="results/dryrun_examples")
+    if not rec["ok"]:
+        raise SystemExit(rec["error"])
+    r = rec["roofline"]
+    print(f"{args.arch} x {args.shape} on {rec['mesh']} "
+          f"({rec['chips']} chips):")
+    print(f"  compile: {rec['compile_s']:.1f}s")
+    print(f"  t_compute    = {r['t_compute']:.3e} s")
+    print(f"  t_memory     = {r['t_memory']:.3e} s")
+    print(f"  t_collective = {r['t_collective']:.3e} s")
+    print(f"  bottleneck   = {r['bottleneck']}")
+    print(f"  useful-FLOP ratio = {r['useful_flops_ratio']:.2f}")
+    mem = rec["memory"]
+    print(f"  per-device bytes: args {mem['argument_bytes']/2**30:.2f} GiB, "
+          f"temps {mem['temp_bytes']/2**30:.2f} GiB")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""End-to-end driver: serve a trained SLM/LLM pair with batched requests
+across all five serving modes and print the paper's headline comparison
+(quality x latency x cloud cost).
+
+Trains the pair on first run (cached in results/ckpt/), then serves
+batched requests through the verification-aware scheduler.
+
+  PYTHONPATH=src:. python examples/serve_synergy.py [--budget 0.35]
+"""
+import argparse
+
+import numpy as np
+
+from benchmarks import paper_claims as PC
+from benchmarks.prepare import get_pair
+from repro.core.offload import OffloadPolicy
+from repro.serving import synergy as SY
+from repro.serving.link import CostModel
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--budget", type=float, default=0.35)
+    ap.add_argument("--n", type=int, default=6, help="#requests")
+    ap.add_argument("--max-new", type=int, default=40)
+    args = ap.parse_args()
+
+    slm_cfg, slm_p, llm_cfg, llm_p, task = get_pair()
+    evalset = PC.eval_set(task, args.n)
+    prompts = [p for p, _ in evalset]
+
+    # offline profiling (Synera §5)
+    dev0 = PC.make_device(slm_cfg, slm_p)
+    eng = PC.make_engine(llm_cfg, llm_p, slots=4)
+    profile, _ = PC.profile_pair(dev0, eng, evalset, task)
+    print(f"profile: c_th={profile.c_th:.3f} alpha={profile.alpha:.3f} "
+          f"gamma={profile.gamma}")
+
+    pol = OffloadPolicy(c_th=profile.c_th,
+                        i_th=profile.i_th_for_budget(args.budget),
+                        mode="both")
+    cost_model = CostModel()
+
+    runs = {
+        "edge-centric": SY.run_edge_centric(
+            PC.make_device(slm_cfg, slm_p,
+                           policy=OffloadPolicy(mode="none")),
+            prompts, args.max_new, cost_model=cost_model),
+        "cloud-centric": SY.run_cloud_centric(
+            eng, prompts, args.max_new, cost_model=cost_model),
+        "synera": SY.run_synera(
+            PC.make_device(slm_cfg, slm_p, policy=pol, alpha=profile.alpha),
+            eng, prompts, args.max_new, cost_model=cost_model),
+    }
+
+    print(f"\n{'method':15s} {'quality':>8s} {'copy_acc':>9s} "
+          f"{'TBT(ms)':>8s} {'cost':>7s} {'cloud%':>7s}")
+    for name, r in runs.items():
+        s = PC.score_outputs(task, evalset, r.outputs)
+        print(f"{name:15s} {s['quality']:8.3f} {s['copy_acc']:9.2%} "
+              f"{r.tbt_ms:8.1f} {r.cost:7.2f} {r.cloud_fed_frac:7.1%}")
+
+    m = runs["synera"].metrics[0]
+    print(f"\nsynera detail: PI hits {m.pi_position_hits}/{m.pi_attempts}, "
+          f"layers saved {m.mean_layers_saved:.1%}, "
+          f"stall {m.timeline.stall_ms:.0f} ms of {m.timeline.t_ms:.0f} ms")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Config registry: importing this package registers every assigned
+architecture (plus the paper's own SLM/LLM pair)."""
+from repro.configs.base import (  # noqa: F401
+    INPUT_SHAPES,
+    InputShape,
+    ModelConfig,
+    get_config,
+    list_archs,
+    register,
+)
+
+# Assigned architectures (10, spanning 6 families) -------------------------
+from repro.configs.glm4_9b import GLM4_9B  # noqa: F401
+from repro.configs.llama3_2_1b import LLAMA32_1B  # noqa: F401
+from repro.configs.qwen3_moe_235b_a22b import QWEN3_MOE_235B  # noqa: F401
+from repro.configs.llama_3_2_vision_90b import LLAMA32_VISION_90B  # noqa: F401
+from repro.configs.llama4_maverick_400b_a17b import LLAMA4_MAVERICK  # noqa: F401
+from repro.configs.whisper_medium import WHISPER_MEDIUM  # noqa: F401
+from repro.configs.qwen2_1_5b import QWEN2_1_5B  # noqa: F401
+from repro.configs.mamba2_2_7b import MAMBA2_2_7B  # noqa: F401
+from repro.configs.zamba2_2_7b import ZAMBA2_2_7B  # noqa: F401
+from repro.configs.qwen1_5_110b import QWEN15_110B  # noqa: F401
+
+# Paper's own models -------------------------------------------------------
+from repro.configs.synera_pair import SYNERA_LLM, SYNERA_SLM, tiny_pair  # noqa: F401
+
+ASSIGNED_ARCHS = [
+    "glm4-9b",
+    "llama3.2-1b",
+    "qwen3-moe-235b-a22b",
+    "llama-3.2-vision-90b",
+    "llama4-maverick-400b-a17b",
+    "whisper-medium",
+    "qwen2-1.5b",
+    "mamba2-2.7b",
+    "zamba2-2.7b",
+    "qwen1.5-110b",
+]

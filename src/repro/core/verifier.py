@@ -1,0 +1,127 @@
+"""Speculative-decoding verification ("draft & verify", Fig 3).
+
+The cloud LLM verifies a chunk of SLM draft tokens.  Two modes:
+
+* greedy  -- accept while argmax(p_t) == draft_t; on mismatch the LLM's
+             argmax replaces the rejected token.
+* sample  -- Leviathan et al. 2023: accept x_t with prob min(1, p/q);
+             on rejection resample from norm(max(p - q, 0)).  Exactly
+             distribution-preserving (we property-test this).
+
+Host-side numpy implementation (the scheduler calls it per request) plus
+a batched jnp implementation used by tests and the batched engine path.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+
+@dataclass
+class VerifyResult:
+    n_accepted: int          # tokens of the draft accepted (0..gamma)
+    corrected: int | None    # replacement token at the rejection position
+    bonus: int | None        # extra token sampled when all gamma accepted
+    tokens: list             # final verified continuation
+
+
+def verify_greedy(draft: np.ndarray, p_logits: np.ndarray) -> VerifyResult:
+    """draft: (gamma,) int; p_logits: (gamma+1, V) LLM logits where row t
+    predicts draft[t] (row gamma predicts the bonus token)."""
+    gamma = len(draft)
+    tops = np.argmax(p_logits, axis=-1)
+    n = 0
+    while n < gamma and tops[n] == draft[n]:
+        n += 1
+    if n == gamma:
+        bonus = int(tops[gamma])
+        return VerifyResult(n, None, bonus, list(draft) + [bonus])
+    return VerifyResult(n, int(tops[n]), None, list(draft[:n]) + [int(tops[n])])
+
+
+def _softmax(x):
+    x = x - x.max(axis=-1, keepdims=True)
+    e = np.exp(x)
+    return e / e.sum(axis=-1, keepdims=True)
+
+
+def verify_sample(draft: np.ndarray, p_logits: np.ndarray,
+                  q_probs_sparse, rng: np.random.Generator) -> VerifyResult:
+    """Stochastic speculative verification.
+
+    q_probs_sparse: list of (idx (k,), val (k,)) per draft position — the
+    *compressed* SLM distribution (core/compression.py).  The values are
+    the renormalized sampling distribution the device actually used, so
+    verification is lossless w.r.t. the intended sampling method (§4.2).
+    """
+    gamma = len(draft)
+    V = p_logits.shape[-1]
+    p = _softmax(p_logits.astype(np.float64))
+    for t in range(gamma):
+        idx, val = q_probs_sparse[t]
+        qt = dict(zip(np.asarray(idx).tolist(), np.asarray(val, np.float64).tolist()))
+        q_x = qt.get(int(draft[t]), 1e-12)
+        p_x = p[t, int(draft[t])]
+        if rng.random() < min(1.0, p_x / q_x):
+            continue
+        # rejected at t: resample from norm(max(p - q, 0))
+        residual = p[t].copy()
+        for j, qv in qt.items():
+            residual[j] = max(residual[j] - qv, 0.0)
+        s = residual.sum()
+        if s <= 0:
+            corrected = int(np.argmax(p[t]))
+        else:
+            corrected = int(rng.choice(V, p=residual / s))
+        return VerifyResult(t, corrected, None, list(draft[:t]) + [corrected])
+    bonus = int(rng.choice(V, p=p[gamma]))
+    return VerifyResult(gamma, None, bonus, list(draft) + [bonus])
+
+
+# ---------------------------------------------------------------------------
+# Batched jnp variant (used by the engine's fused verification path and by
+# the property tests).
+# ---------------------------------------------------------------------------
+
+import jax
+import jax.numpy as jnp
+
+
+def verify_greedy_batched(draft, p_logits):
+    """draft: (B, gamma); p_logits: (B, gamma+1, V).
+
+    Returns (n_accepted (B,), corrected (B,), bonus (B,)) where
+    ``corrected`` is the replacement at the rejection position (valid when
+    n_accepted < gamma) and ``bonus`` the extra token (valid otherwise).
+    """
+    gamma = draft.shape[1]
+    tops = jnp.argmax(p_logits, axis=-1)  # (B, gamma+1)
+    match = tops[:, :gamma] == draft      # (B, gamma)
+    # first mismatch position (gamma if none)
+    n_acc = jnp.where(match.all(axis=1), gamma,
+                      jnp.argmin(match.astype(jnp.int32), axis=1))
+    corrected = jnp.take_along_axis(
+        tops, jnp.minimum(n_acc, gamma - 1)[:, None], axis=1)[:, 0]
+    bonus = tops[:, gamma]
+    return n_acc, corrected, bonus
+
+
+def expected_accepted(alpha: float, gamma: int) -> float:
+    """E[#generated] for per-token acceptance alpha (capped geometric,
+    Leviathan eq. 1): (1 - alpha^{gamma+1}) / (1 - alpha)."""
+    if alpha >= 1.0:
+        return gamma + 1.0
+    return (1.0 - alpha ** (gamma + 1)) / (1.0 - alpha)
+
+
+def alpha_from_expected(e_gen: float, gamma: int) -> float:
+    """Invert expected_accepted by bisection (profiling §5)."""
+    lo, hi = 1e-6, 1.0 - 1e-9
+    for _ in range(60):
+        mid = 0.5 * (lo + hi)
+        if expected_accepted(mid, gamma) < e_gen:
+            lo = mid
+        else:
+            hi = mid
+    return 0.5 * (lo + hi)

@@ -1,0 +1,20 @@
+"""jit'd public wrapper for the fused attention+importance kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.attn_importance.attn_importance import attn_with_importance
+
+
+@partial(jax.jit, static_argnames=("causal", "q_offset", "interpret"))
+def attention_with_importance(q, k, v, *, causal: bool = True,
+                              q_offset: int = 0, interpret: bool = True):
+    """Kernel entry point.  Returns (out, paper_importance (B, S)) where
+    the paper's importance score is the head-mean of the per-head column
+    sums (Synera Fig 2)."""
+    out, imp = attn_with_importance(q, k, v, causal=causal,
+                                    q_offset=q_offset, interpret=interpret)
+    return out, imp.mean(axis=1)

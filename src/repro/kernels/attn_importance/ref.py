@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the fused attention+importance kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attn_with_importance_ref(q, k, v, *, causal: bool = True,
+                             q_offset: int = 0):
+    """q: (B, Tq, nh, hd); k, v: (B, S, nkv, hd).
+
+    Returns (out (B, Tq, nh, hd), importance (B, nh, S)).
+    """
+    B, Tq, nh, hd = q.shape
+    S, nkv = k.shape[1], k.shape[2]
+    g = nh // nkv
+    kf = jnp.repeat(k, g, axis=2).astype(jnp.float32)
+    vf = jnp.repeat(v, g, axis=2).astype(jnp.float32)
+    scale = 1.0 / (hd ** 0.5)
+    s = jnp.einsum("bthd,bshd->bhts", q.astype(jnp.float32), kf) * scale
+    if causal:
+        q_pos = q_offset + jnp.arange(Tq)
+        kv_pos = jnp.arange(S)
+        mask = kv_pos[None, :] <= q_pos[:, None]
+        s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)  # (B, nh, Tq, S)
+    out = jnp.einsum("bhts,bshd->bthd", p, vf).astype(q.dtype)
+    imp = p.sum(axis=2)             # (B, nh, S) column sums
+    return out, imp

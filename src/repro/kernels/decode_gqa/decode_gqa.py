@@ -1,0 +1,117 @@
+"""Pallas TPU kernel: GQA decode attention (one token vs a long KV cache).
+
+Decode is memory-bound: the whole KV cache streams through VMEM once per
+step.  The GQA structure is the lever — this kernel processes all ``g``
+query heads of one KV group per program, so each K/V block is loaded
+from HBM ONCE and reused by the whole group (a g-fold HBM-traffic saving
+over the per-q-head layout; cf. EXPERIMENTS.md §Perf decode analysis).
+
+Grid = (batch * kv_heads, kv blocks); online-softmax state for the g
+group heads lives in VMEM scratch across the sequential block axis.
+Supports the circular sliding-window cache (kv_pos = -1 invalid slots,
+``window`` for long-context decode).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, qp_ref, kp_ref, o_ref,
+                   m_scr, l_scr, acc_scr, *, n_kvb: int, window: int,
+                   scale: float):
+    sb = pl.program_id(1)
+
+    @pl.when(sb == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32) * scale      # (g, hd)
+    k = k_ref[0].astype(jnp.float32)               # (bkv, hd) loaded once
+    v = v_ref[0].astype(jnp.float32)               # (bkv, hd)
+    q_pos = qp_ref[0, 0]                           # scalar
+    kv_pos = kp_ref[0]                             # (bkv,)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (g, bkv)
+    valid = (kv_pos >= 0) & (kv_pos <= q_pos)
+    if window:
+        valid &= (q_pos - kv_pos) < window
+    s = jnp.where(valid[None, :], s, NEG_INF)
+
+    m_prev, l_prev, acc_prev = m_scr[...], l_scr[...], acc_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    corr = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    p = jnp.where(valid[None, :], p, 0.0)
+    l_new = l_prev * corr + jnp.sum(p, axis=1)
+    acc_new = acc_prev * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())))
+
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+    acc_scr[...] = acc_new
+
+    @pl.when(sb == n_kvb - 1)
+    def _finish():
+        l = jnp.where(l_new == 0.0, 1.0, l_new)
+        o_ref[0] = (acc_new / l[:, None]).astype(o_ref.dtype)
+
+
+def decode_attention(q, k, v, q_pos, kv_pos, *, window: int = 0,
+                     block_kv: int = 512, interpret: bool = True):
+    """q: (B, nh, hd) one token per request; k, v: (B, S, nkv, hd);
+    q_pos: (B,) int32 absolute position; kv_pos: (B, S) int32.
+
+    Returns out (B, nh, hd).
+    """
+    B, nh, hd = q.shape
+    S, nkv = k.shape[1], k.shape[2]
+    g = nh // nkv
+    scale = 1.0 / (hd ** 0.5)
+
+    bkv = min(block_kv, S)
+    n_kvb = pl.cdiv(S, bkv)
+    pad = n_kvb * bkv - S
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, ((0, 0), (0, pad)), constant_values=-1)
+        S = S + pad
+
+    qg = q.reshape(B * nkv, g, hd)
+    kh = jnp.moveaxis(k, 2, 1).reshape(B * nkv, S, hd)
+    vh = jnp.moveaxis(v, 2, 1).reshape(B * nkv, S, hd)
+    qp = q_pos.reshape(B, 1).astype(jnp.int32)
+
+    kernel = functools.partial(_decode_kernel, n_kvb=n_kvb, window=window,
+                               scale=scale)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * nkv, n_kvb),
+        in_specs=[
+            pl.BlockSpec((1, g, hd), lambda bk, sb: (bk, 0, 0)),
+            pl.BlockSpec((1, bkv, hd), lambda bk, sb: (bk, sb, 0)),
+            pl.BlockSpec((1, bkv, hd), lambda bk, sb: (bk, sb, 0)),
+            pl.BlockSpec((1, 1), lambda bk, sb, nkv=nkv: (bk // nkv, 0)),
+            pl.BlockSpec((1, bkv), lambda bk, sb, nkv=nkv: (bk // nkv, sb)),
+        ],
+        out_specs=pl.BlockSpec((1, g, hd), lambda bk, sb: (bk, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * nkv, g, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, kh, vh, qp, kv_pos)
+
+    return out.reshape(B, nh, hd)

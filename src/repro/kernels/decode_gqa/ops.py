@@ -1,0 +1,15 @@
+"""jit'd wrapper for the GQA decode kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.decode_gqa.decode_gqa import decode_attention
+
+
+@partial(jax.jit, static_argnames=("window", "block_kv", "interpret"))
+def gqa_decode(q, k, v, q_pos, kv_pos, *, window: int = 0,
+               block_kv: int = 512, interpret: bool = True):
+    return decode_attention(q, k, v, q_pos, kv_pos, window=window,
+                            block_kv=block_kv, interpret=interpret)

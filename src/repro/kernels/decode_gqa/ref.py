@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for GQA decode attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_attention_ref(q, k, v, q_pos, kv_pos, *, window: int = 0):
+    """q: (B, nh, hd); k, v: (B, S, nkv, hd); q_pos: (B,); kv_pos: (B, S)."""
+    B, nh, hd = q.shape
+    S, nkv = k.shape[1], k.shape[2]
+    g = nh // nkv
+    kf = jnp.repeat(k, g, axis=2).astype(jnp.float32)
+    vf = jnp.repeat(v, g, axis=2).astype(jnp.float32)
+    scale = 1.0 / (hd ** 0.5)
+    s = jnp.einsum("bhd,bshd->bhs", q.astype(jnp.float32), kf) * scale
+    valid = (kv_pos >= 0) & (kv_pos <= q_pos[:, None])
+    if window:
+        valid &= (q_pos[:, None] - kv_pos) < window
+    s = jnp.where(valid[:, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhs,bshd->bhd", p, vf)
+    return out.astype(q.dtype)

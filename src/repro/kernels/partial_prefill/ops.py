@@ -1,0 +1,16 @@
+"""jit'd wrapper for the partial-prefill kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.partial_prefill.partial_prefill import (
+    partial_prefill_attention)
+
+
+@partial(jax.jit, static_argnames=("window", "block_kv", "interpret"))
+def partial_prefill(q, k, v, q_pos, kv_pos, *, window: int = 0,
+                    block_kv: int = 512, interpret: bool = True):
+    return partial_prefill_attention(q, k, v, q_pos, kv_pos, window=window,
+                                     block_kv=block_kv, interpret=interpret)

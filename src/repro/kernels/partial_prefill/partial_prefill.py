@@ -1,0 +1,123 @@
+"""Pallas TPU kernel: chunked partial prefill over a cached KV prefix.
+
+This is the cloud-side hot op of Synera's verification-aware scheduler
+(§4.5): a fixed-size chunk (Sarathi chunk, default 32) of
+[device-accepted uncached tokens + pending-verify draft tokens] attends
+over the request's long cached prefix plus itself (causal within the
+chunk by absolute positions).
+
+TPU design:
+  * the chunk (C <= 32 queries) is VMEM-resident per (batch, head)
+    program; the long KV cache streams through VMEM in blocks of
+    ``block_kv`` (HBM -> VMEM pipelining via the grid's minormost axis);
+  * online softmax (m, l, acc) lives in VMEM scratch carried across the
+    sequential KV-block grid steps — the standard TPU flash-decode
+    pattern;
+  * positions arrive as explicit arrays (the cache is a circular buffer
+    with -1 = invalid slots; padded queries carry position -1), so the
+    mask logic is identical to the XLA serving path (layers.cache_write).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _pp_kernel(q_ref, k_ref, v_ref, qp_ref, kp_ref, o_ref,
+               m_scr, l_scr, acc_scr, *, n_kvb: int, window: int,
+               scale: float):
+    sb = pl.program_id(1)
+
+    @pl.when(sb == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32) * scale      # (C, hd)
+    k = k_ref[0].astype(jnp.float32)               # (bkv, hd)
+    v = v_ref[0].astype(jnp.float32)               # (bkv, hd)
+    q_pos = qp_ref[0]                              # (C,) int32
+    kv_pos = kp_ref[0]                             # (bkv,) int32
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (C, bkv)
+    valid = (kv_pos[None, :] >= 0) & (q_pos[:, None] >= 0) \
+        & (kv_pos[None, :] <= q_pos[:, None])
+    if window:
+        valid &= (q_pos[:, None] - kv_pos[None, :]) < window
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev, l_prev, acc_prev = m_scr[...], l_scr[...], acc_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    corr = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    p = jnp.where(valid, p, 0.0)
+    l_new = l_prev * corr + jnp.sum(p, axis=1)
+    acc_new = acc_prev * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())))
+
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+    acc_scr[...] = acc_new
+
+    @pl.when(sb == n_kvb - 1)
+    def _finish():
+        l = jnp.where(l_new == 0.0, 1.0, l_new)
+        o_ref[0] = (acc_new / l[:, None]).astype(o_ref.dtype)
+
+
+def partial_prefill_attention(q, k, v, q_pos, kv_pos, *, window: int = 0,
+                              block_kv: int = 512, interpret: bool = True):
+    """q: (B, C, nh, hd); k, v: (B, S, nkv, hd); q_pos: (B, C) int32;
+    kv_pos: (B, S) int32 (cache slot positions, -1 = invalid).
+
+    Returns out (B, C, nh, hd).
+    """
+    B, C, nh, hd = q.shape
+    S, nkv = k.shape[1], k.shape[2]
+    g = nh // nkv
+    scale = 1.0 / (hd ** 0.5)
+
+    bkv = min(block_kv, S)
+    n_kvb = pl.cdiv(S, bkv)
+    pad = n_kvb * bkv - S
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, ((0, 0), (0, pad)), constant_values=-1)
+        S = S + pad
+
+    qh = jnp.moveaxis(q, 2, 1).reshape(B * nh, C, hd)
+    kh = jnp.moveaxis(k, 2, 1).reshape(B * nkv, S, hd)
+    vh = jnp.moveaxis(v, 2, 1).reshape(B * nkv, S, hd)
+
+    kernel = functools.partial(_pp_kernel, n_kvb=n_kvb, window=window,
+                               scale=scale)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * nh, n_kvb),
+        in_specs=[
+            pl.BlockSpec((1, C, hd), lambda bh, sb: (bh, 0, 0)),
+            pl.BlockSpec((1, bkv, hd), lambda bh, sb, g=g: (bh // g, sb, 0)),
+            pl.BlockSpec((1, bkv, hd), lambda bh, sb, g=g: (bh // g, sb, 0)),
+            pl.BlockSpec((1, C), lambda bh, sb, nh=nh: (bh // nh, 0)),
+            pl.BlockSpec((1, bkv), lambda bh, sb, nh=nh: (bh // nh, sb)),
+        ],
+        out_specs=pl.BlockSpec((1, C, hd), lambda bh, sb: (bh, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * nh, C, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((C,), jnp.float32),
+            pltpu.VMEM((C,), jnp.float32),
+            pltpu.VMEM((C, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qh, kh, vh, q_pos, kv_pos)
+
+    return jnp.moveaxis(out.reshape(B, nh, C, hd), 1, 2)

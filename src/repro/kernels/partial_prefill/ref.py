@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the partial-prefill kernel: identical semantics to
+the serving path (layers.attention over a positional cache)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def partial_prefill_ref(q, k, v, q_pos, kv_pos, *, window: int = 0):
+    B, C, nh, hd = q.shape
+    S, nkv = k.shape[1], k.shape[2]
+    g = nh // nkv
+    kf = jnp.repeat(k, g, axis=2).astype(jnp.float32)
+    vf = jnp.repeat(v, g, axis=2).astype(jnp.float32)
+    scale = 1.0 / (hd ** 0.5)
+    s = jnp.einsum("bchd,bshd->bhcs", q.astype(jnp.float32), kf) * scale
+    valid = (kv_pos[:, None, :] >= 0) & (q_pos[:, :, None] >= 0) \
+        & (kv_pos[:, None, :] <= q_pos[:, :, None])
+    if window:
+        valid &= (q_pos[:, :, None] - kv_pos[:, None, :]) < window
+    s = jnp.where(valid[:, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    # fully-masked rows (padded queries): zero them like the kernel's
+    # l==0 guard
+    any_valid = valid.any(axis=-1)[:, None, :, None]
+    p = jnp.where(any_valid, p, 0.0)
+    out = jnp.einsum("bhcs,bshd->bchd", p, vf)
+    return out.astype(q.dtype)

@@ -1,0 +1,20 @@
+"""jit'd wrapper for the SSD scan kernel (adds the D skip term the model
+path applies, so it is drop-in for models/layers.mamba_block)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan.ssd_scan import ssd_scan
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd(x, dt, A, Bm, Cm, D=None, *, chunk: int = 64, h0=None,
+        interpret: bool = True):
+    y, h = ssd_scan(x, dt, A, Bm, Cm, chunk=chunk, h0=h0,
+                    interpret=interpret)
+    if D is not None:
+        y = y + (D[:, None] * x.astype(jnp.float32)).astype(y.dtype)
+    return y, h

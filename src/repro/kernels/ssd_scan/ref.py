@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the SSD scan kernel: the chunked SSD from the
+model path (models/layers.ssd_chunked), which is itself validated
+against sequential recurrence in tests."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.layers import ssd_chunked, ssd_decode
+
+
+def ssd_scan_ref(x, dt, A, Bm, Cm, *, chunk: int = 64, h0=None):
+    Q = min(chunk, x.shape[1])
+    pad = (-x.shape[1]) % Q
+    L = x.shape[1]
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    y, h = ssd_chunked(x, dt, A, Bm, Cm, chunk=Q, h0=h0)
+    return y[:, :L], h
+
+
+def ssd_sequential_ref(x, dt, A, Bm, Cm, h0=None):
+    """Token-by-token recurrence — the ground truth both the kernel and
+    the chunked path must match."""
+    B, L, H, P = x.shape
+    N = Bm.shape[-1]
+    h = (jnp.zeros((B, H, P, N), jnp.float32) if h0 is None
+         else h0.astype(jnp.float32))
+    ys = []
+    for t in range(L):
+        y, h = ssd_decode(x[:, t:t + 1], dt[:, t:t + 1], A,
+                          Bm[:, t:t + 1], Cm[:, t:t + 1], h)
+        ys.append(y)
+    return jnp.concatenate(ys, axis=1), h

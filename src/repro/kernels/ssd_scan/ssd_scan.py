@@ -1,0 +1,126 @@
+"""Pallas TPU kernel: Mamba2 SSD chunked scan (state-space duality).
+
+One program per (batch, head); the grid's minormost axis walks the
+sequence chunk-by-chunk with the running SSM state (P x N, f32) carried
+in VMEM scratch — the TPU-native shape of the SSD algorithm: the
+intra-chunk dual quadratic form feeds the MXU (three (Q,Q)/(Q,N)/(Q,P)
+matmuls per chunk), while the inter-chunk recurrence is a cheap
+VMEM-resident rank-1-per-step update folded into the sequential grid.
+
+Inputs are pre-activated (dt already softplus'd, conv+silu applied):
+this kernel is the scan hot-spot only; the surrounding projections stay
+in XLA where they fuse fine (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, h0_ref,
+                y_ref, hout_ref, state_scr, *, n_chunks: int, chunk: int,
+                use_h0: bool):
+    cb = pl.program_id(1)
+
+    @pl.when(cb == 0)
+    def _init():
+        if use_h0:
+            state_scr[...] = h0_ref[0].astype(jnp.float32)
+        else:
+            state_scr[...] = jnp.zeros_like(state_scr)
+
+    x = x_ref[0].astype(jnp.float32)     # (Q, P)
+    dt = dt_ref[0].astype(jnp.float32)   # (Q,)
+    Bm = b_ref[0].astype(jnp.float32)    # (Q, N)
+    Cm = c_ref[0].astype(jnp.float32)    # (Q, N)
+    A = a_ref[0]                          # scalar (negative)
+
+    dA = dt * A                           # (Q,)
+    dAc = jnp.cumsum(dA)                  # (Q,)
+
+    # intra-chunk dual form: L[i,j] = exp(dAc_i - dAc_j) for j <= i
+    diff = dAc[:, None] - dAc[None, :]
+    mask = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    Lmat = jnp.where(mask, jnp.exp(diff), 0.0)
+
+    scores = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())))  # (Q, Q)
+    M = scores * Lmat * dt[None, :]
+    y_diag = jax.lax.dot_general(M, x, (((1,), (0,)), ((), ())))    # (Q, P)
+
+    # inter-chunk: contribution of the carried state
+    state = state_scr[...]                                          # (P, N)
+    y_off = jax.lax.dot_general(
+        Cm, state, (((1,), (1,)), ((), ()))) * jnp.exp(dAc)[:, None]
+
+    y_ref[0] = (y_diag + y_off).astype(y_ref.dtype)
+
+    # state update: h <- h * exp(sum dA) + x^T (B * decay * dt)
+    decay_states = jnp.exp(dAc[-1] - dAc) * dt                      # (Q,)
+    upd = jax.lax.dot_general(
+        x, Bm * decay_states[:, None], (((0,), (0,)), ((), ())))    # (P, N)
+    state_scr[...] = state * jnp.exp(dAc[-1]) + upd
+
+    @pl.when(cb == n_chunks - 1)
+    def _finish():
+        hout_ref[0] = state_scr[...]
+
+
+def ssd_scan(x, dt, A, Bm, Cm, *, chunk: int = 64, h0=None,
+             interpret: bool = True):
+    """x: (B, L, H, P); dt: (B, L, H) (softplus'd); A: (H,) negative;
+    Bm, Cm: (B, L, N); h0: (B, H, P, N) or None.
+
+    Returns (y (B, L, H, P), h_final (B, H, P, N)).  L is padded to a
+    chunk multiple with dt=0 (a no-op on the state).
+    """
+    B, L, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, L)
+    pad = (-L) % Q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    Lp = L + pad
+    n_chunks = Lp // Q
+
+    xh = jnp.moveaxis(x, 2, 1).reshape(B * H, Lp, P)
+    dth = jnp.moveaxis(dt, 2, 1).reshape(B * H, Lp)
+    use_h0 = h0 is not None
+    h0h = (h0.reshape(B * H, P, N).astype(jnp.float32) if use_h0
+           else jnp.zeros((B * H, P, N), jnp.float32))
+
+    kernel = functools.partial(_ssd_kernel, n_chunks=n_chunks, chunk=Q,
+                               use_h0=use_h0)
+
+    y, h_fin = pl.pallas_call(
+        kernel,
+        grid=(B * H, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, Q, P), lambda bh, cb: (bh, cb, 0)),
+            pl.BlockSpec((1, Q), lambda bh, cb: (bh, cb)),
+            pl.BlockSpec((1, Q, N), lambda bh, cb, H=H: (bh // H, cb, 0)),
+            pl.BlockSpec((1, Q, N), lambda bh, cb, H=H: (bh // H, cb, 0)),
+            pl.BlockSpec((1,), lambda bh, cb, H=H: (bh % H,)),
+            pl.BlockSpec((1, P, N), lambda bh, cb: (bh, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Q, P), lambda bh, cb: (bh, cb, 0)),
+            pl.BlockSpec((1, P, N), lambda bh, cb: (bh, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B * H, Lp, P), x.dtype),
+            jax.ShapeDtypeStruct((B * H, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(xh, dth, Bm, Cm, A.astype(jnp.float32), h0h)
+
+    y = jnp.moveaxis(y.reshape(B, H, Lp, P), 1, 2)[:, :L]
+    return y, h_fin.reshape(B, H, P, N)

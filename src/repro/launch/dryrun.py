@@ -1,0 +1,227 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (architecture x input shape)
+on the production mesh and extract roofline inputs from the compiled
+artifact.  MUST be run as a module: the two lines above execute before
+any jax import (jax locks the device count on first init).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch glm4-9b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--shapes ...]
+
+Outputs one JSON per combination under results/dryrun/.
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ASSIGNED_ARCHS, INPUT_SHAPES, get_config
+from repro.launch import sharding as SH
+from repro.launch.hlo_analysis import analyze as hlo_analyze
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import (cache_len_for, decode_window_for, input_specs,
+                                params_specs)
+from repro.models import model as M
+from repro.models.steps import (make_decode_step, make_prefill_step,
+                                make_train_step, make_verify_step)
+from repro.optim.adamw import AdamW
+
+# ---------------------------------------------------------------------------
+# Hardware constants (TPU v5e)
+# ---------------------------------------------------------------------------
+PEAK_FLOPS = 197e12        # bf16 per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link
+
+
+def build_step(cfg, shape_name: str, mesh):
+    """Returns (fn, args_avals, in_shardings, out_shardings).  Also
+    installs the logits sharding hint (models/shardctx.py)."""
+    from repro.models import shardctx
+    shp = INPUT_SHAPES[shape_name]
+    p_avals = params_specs(cfg)
+    mode = "train" if shp.kind == "train" else "serve"
+    p_shard = SH.params_shardings(mesh, cfg, p_avals, mode=mode)
+    specs = input_specs(cfg, shape_name)
+    from repro.launch.mesh import batch_axes
+    shardctx.set_hints(
+        logits=SH.logits_sharding(mesh, cfg, shp.global_batch),
+        mesh_batch_axes=(mesh, batch_axes(mesh)),
+        moe_mesh=(mesh, batch_axes(mesh)) if cfg.n_experts else None)
+
+    if shp.kind == "train":
+        big = cfg.param_count() > 1e11
+        opt = AdamW(state_dtype=jnp.bfloat16 if big else jnp.float32)
+        # in-step gradient accumulation so activations fit HBM (§Perf it.7)
+        n_par = cfg.param_count()
+        micro = 16 if n_par > 1e11 else (8 if n_par > 5e9 else 1)
+        o_avals = jax.eval_shape(opt.init, p_avals)
+        # moments mirror the param shardings
+        o_shard = type(o_avals)(
+            step=SH.NamedSharding(mesh, SH.P()),
+            mu=SH.params_shardings(mesh, cfg, o_avals.mu, mode="train"),
+            nu=SH.params_shardings(mesh, cfg, o_avals.nu, mode="train"),
+        )
+        b_shard = SH.batch_shardings(mesh, specs["batch"])
+        fn = make_train_step(cfg, opt, micro_batches=micro)
+        args = (p_avals, o_avals, specs["batch"])
+        in_sh = (p_shard, o_shard, b_shard)
+        out_sh = (p_shard, o_shard, None)
+        return fn, args, in_sh, out_sh
+
+    c_avals = specs["cache"]
+    c_shard = SH.cache_shardings(mesh, cfg, c_avals, shp.global_batch)
+
+    if shp.kind == "prefill":
+        fn0 = make_prefill_step(cfg)
+        aux = specs["aux"]
+        if aux:
+            fn = lambda p, c, t, a: fn0(p, c, t, aux_inputs=a)
+            args = (p_avals, c_avals, specs["tokens"], aux)
+            in_sh = (p_shard, c_shard, SH.batch_shardings(mesh, specs["tokens"]),
+                     SH.batch_shardings(mesh, aux))
+        else:
+            fn = lambda p, c, t: fn0(p, c, t)
+            args = (p_avals, c_avals, specs["tokens"])
+            in_sh = (p_shard, c_shard,
+                     SH.batch_shardings(mesh, specs["tokens"]))
+        return fn, args, in_sh, (None, c_shard)
+
+    # decode / verify
+    window = decode_window_for(cfg, shape_name)
+    if shp.kind == "decode":
+        dcfg = cfg.replace(attn_impl="naive")  # Tq=1: naive IS the decode
+        fn = make_decode_step(dcfg, window=window)
+    else:
+        # §Perf iteration (verify hillclimb): a 32-token chunk over a 32k
+        # cache wants the grouped (un-expanded) attention like decode —
+        # the blocked path's head expansion reshards the cache across the
+        # model axis (all-gather per verification iteration)
+        vcfg = cfg.replace(attn_impl="naive")
+        fn = make_verify_step(vcfg, window=window)
+    args = (p_avals, c_avals, specs["tokens"], specs["positions"])
+    in_sh = (p_shard, c_shard, SH.batch_shardings(mesh, specs["tokens"]),
+             SH.batch_shardings(mesh, specs["positions"]))
+    return fn, args, in_sh, (None, c_shard)
+
+
+def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+            out_dir: str = "results/dryrun", cfg_override=None,
+            tag: str = "") -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    cfg = cfg_override or get_config(arch)
+    shp = INPUT_SHAPES[shape_name]
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "x".join(map(str, mesh.devices.shape)),
+           "chips": n_chips, "tag": tag}
+    t0 = time.time()
+    try:
+        fn, args, in_sh, out_sh = build_step(cfg, shape_name, mesh)
+        jf = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
+        lowered = jf.lower(*args)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        ha = hlo_analyze(hlo)  # trip-count-aware (launch/hlo_analysis.py)
+
+        flops = float(ha["flops"])
+        bytes_acc = float(ha["bytes"])
+        coll_bytes = float(ha["collective_bytes"])
+        rec.update({
+            "ok": True,
+            "lower_s": round(t1 - t0, 2),
+            "compile_s": round(t2 - t1, 2),
+            "flops_per_dev": flops,
+            "bytes_per_dev": bytes_acc,
+            "collective_bytes_per_dev": coll_bytes,
+            "collective_by_kind": ha["collective_by_kind"],
+            "trip_counts": ha["trip_counts"],
+            "xla_cost_analysis": {
+                "flops_body_once": float(cost.get("flops", 0.0)),
+                "bytes_body_once": float(cost.get("bytes accessed", 0.0)),
+            },
+            "hlo_bytes": len(hlo),
+            "memory": {
+                "argument_bytes": mem.argument_size_in_bytes,
+                "output_bytes": mem.output_size_in_bytes,
+                "temp_bytes": mem.temp_size_in_bytes,
+                "alias_bytes": mem.alias_size_in_bytes,
+            },
+        })
+        # roofline terms (seconds, per chip)
+        n_tokens = shp.global_batch * (1 if shp.kind == "decode"
+                                       else (cfg.max_verify_chunk
+                                             if shp.kind == "verify"
+                                             else shp.seq_len))
+        n_active = cfg.active_param_count()
+        # train: 6ND (fwd 2ND + bwd 4ND); inference: 2ND
+        model_flops = (6.0 if shp.kind == "train" else 2.0) * n_active * n_tokens
+        rec["roofline"] = {
+            "t_compute": flops / PEAK_FLOPS,
+            "t_memory": bytes_acc / HBM_BW,
+            "t_collective": coll_bytes / ICI_BW,
+            "model_flops_per_dev": model_flops / n_chips,
+            "useful_flops_ratio": (model_flops / n_chips) / max(flops, 1.0),
+        }
+        terms = {k: rec["roofline"][f"t_{k}"]
+                 for k in ("compute", "memory", "collective")}
+        rec["roofline"]["bottleneck"] = max(terms, key=terms.get)
+    except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
+        rec.update({"ok": False, "error": f"{type(e).__name__}: {e}",
+                    "traceback": traceback.format_exc()[-2000:]})
+    os.makedirs(out_dir, exist_ok=True)
+    suffix = "_mp" if multi_pod else ""
+    tag_s = f"_{tag}" if tag else ""
+    fname = f"{out_dir}/{arch.replace('.', '_')}_{shape_name}{suffix}{tag_s}.json"
+    with open(fname, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--shapes", nargs="*", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    archs = ASSIGNED_ARCHS if (args.all or not args.arch) else [args.arch]
+    shapes = (args.shapes or
+              ([args.shape] if args.shape else
+               ["train_4k", "prefill_32k", "decode_32k", "long_500k"]))
+
+    n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            rec = run_one(arch, shape, multi_pod=args.multi_pod,
+                          out_dir=args.out, tag=args.tag)
+            if rec["ok"]:
+                r = rec["roofline"]
+                print(f"OK   {arch:28s} {shape:12s} mesh={rec['mesh']:9s} "
+                      f"compile={rec['compile_s']:6.1f}s "
+                      f"t_comp={r['t_compute']:.2e} t_mem={r['t_memory']:.2e} "
+                      f"t_coll={r['t_collective']:.2e} -> {r['bottleneck']}",
+                      flush=True)
+            else:
+                n_fail += 1
+                print(f"FAIL {arch:28s} {shape:12s}: {rec['error']}",
+                      flush=True)
+    if n_fail:
+        raise SystemExit(f"{n_fail} dry-run failures")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,248 @@
+"""Trip-count-aware HLO cost extraction.
+
+XLA's ``compiled.cost_analysis()`` counts each while-loop body ONCE, but
+our layer stacks are ``lax.scan``s — a 94-layer model's per-layer cost
+would be undercounted ~94x.  This module walks the post-SPMD HLO text,
+builds the computation call graph (while bodies with
+``known_trip_count``, calls, conditionals), and accumulates
+
+  * dot/convolution FLOPs     (2 x prod(result dims) x prod(contract dims),
+                               operand shapes resolved from each
+                               computation's local def table)
+  * bytes accessed            (result + operand array bytes per op — the
+                               fused-kernel HBM-traffic approximation:
+                               fusion subcomputations are not walked, the
+                               fusion op's operands/result at the callsite
+                               are the actual traffic)
+  * collective result bytes   (all-gather / all-reduce / reduce-scatter /
+                               all-to-all / collective-permute)
+
+each multiplied by the product of enclosing trip counts.  This is the
+measurement backbone for EXPERIMENTS.md §Roofline.  The HLO here is the
+post-SPMD per-device module, so all numbers are per-chip.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_ARRAY_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^(?:ROOT )?%?([\w\.\-]+) = (.+?) ([\w\-]+)\(")
+_HDR_RE = re.compile(r"^(ENTRY )?%?([\w\.\-]+) \(")
+_TRIP_RE = re.compile(r'known_trip_count\\?":\s*{\\?"n\\?":\\?"(\d+)')
+_BODY_RE = re.compile(r"body=%?([\w\.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w\.\-]+)")
+_CALL_RE = re.compile(r"to_apply=%?([\w\.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations={([^}]*)}")
+_DOT_CDIMS = re.compile(r"lhs_contracting_dims={([\d,]*)}")
+
+_FREE_OPS = {"parameter", "get-tuple-element", "tuple", "bitcast", "constant",
+             "after-all", "partition-id", "replica-id", "get-dimension-size",
+             "while", "conditional", "call", "custom-call", "iota",
+             "rng-bit-generator", "opt-barrier"}
+
+
+def _array_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _ARRAY_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _first_shape(type_str: str) -> list[int]:
+    m = _ARRAY_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclass
+class OpStats:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collective_by_kind: dict = field(default_factory=dict)
+    n_ops: int = 0
+    unresolved_dots: int = 0
+
+
+@dataclass
+class Computation:
+    name: str
+    is_entry: bool = False
+    lines: list = field(default_factory=list)
+    calls: list = field(default_factory=list)     # (callee, multiplier)
+    stats: OpStats = field(default_factory=OpStats)
+
+
+def _parse_computations(hlo: str) -> tuple[dict, str]:
+    comps: dict[str, Computation] = {}
+    entry = None
+    cur = None
+    for raw in hlo.splitlines():
+        if raw and not raw.startswith(" ") and raw.rstrip().endswith("{") \
+                and "->" in raw:
+            m = _HDR_RE.match(raw)
+            if m:
+                cur = Computation(m.group(2), is_entry=bool(m.group(1)))
+                comps[cur.name] = cur
+                if cur.is_entry:
+                    entry = cur.name
+                continue
+        if cur is None:
+            continue
+        s = raw.strip()
+        if s == "}":
+            cur = None
+        elif s:
+            cur.lines.append(s)
+    return comps, entry
+
+
+def _operand_names(rhs: str, op: str) -> list[str]:
+    seg = rhs.split(op + "(", 1)
+    if len(seg) < 2:
+        return []
+    inner = seg[1].split(")", 1)[0]
+    return re.findall(r"%([\w\.\-]+)", inner)
+
+
+def _analyze_comp(c: Computation):
+    types: dict[str, str] = {}
+    # pass 1: local def table (params via their GTE/parameter lines)
+    parsed = []
+    for s in c.lines:
+        m = _DEF_RE.match(s)
+        if not m:
+            continue
+        name, type_str, op = m.groups()
+        types[name] = type_str
+        parsed.append((name, type_str, op, s))
+        if op == "parameter" or s.split(" = ", 1)[1].startswith(type_str + " parameter"):
+            pass
+    # parameter lines look like: %param.2 = f32[4,64]{1,0} parameter(0)
+    for name, type_str, op, s in parsed:
+        st = c.stats
+        st.n_ops += 1
+        base = op[:-6] if op.endswith("-start") else op
+        base = base[:-5] if base.endswith("-done") else base
+        if " while(" in s or " conditional(" in s or re.search(
+                r" call\(", s) or "async-call" in s:
+            c.calls.extend(_find_calls(s))
+        if base in _FREE_OPS:
+            continue
+        operands = _operand_names(s, op)
+        op_bytes = _array_bytes(type_str)
+        for o in operands:
+            if o in types:
+                op_bytes += _array_bytes(types[o])
+        if base in _COLLECTIVES:
+            b = _array_bytes(type_str)
+            st.collective_bytes += b
+            st.collective_by_kind[base] = st.collective_by_kind.get(base, 0) + b
+            st.bytes += op_bytes
+            continue
+        st.bytes += op_bytes
+        if base == "dot":
+            res = _first_shape(type_str)
+            cm = _DOT_CDIMS.search(s)
+            lhs_t = types.get(operands[0]) if operands else None
+            if cm is not None and lhs_t:
+                lshape = _first_shape(lhs_t)
+                k = 1
+                for cd in (int(d) for d in cm.group(1).split(",") if d):
+                    if cd < len(lshape):
+                        k *= lshape[cd]
+                n = 1
+                for d in res:
+                    n *= d
+                st.flops += 2.0 * n * k
+            else:
+                st.unresolved_dots += 1
+        elif base == "convolution":
+            res = _first_shape(type_str)
+            n = 1
+            for d in res:
+                n *= d
+            k = 1
+            if len(operands) >= 2 and operands[1] in types:
+                for d in _first_shape(types[operands[1]]):
+                    k *= d
+            st.flops += 2.0 * n * max(k, 1)
+
+
+def _find_calls(s: str) -> list[tuple[str, float]]:
+    out = []
+    if " while(" in s:
+        trip = 1.0
+        tm = _TRIP_RE.search(s)
+        if tm:
+            trip = float(tm.group(1))
+        bm = _BODY_RE.search(s)
+        if bm:
+            out.append((bm.group(1), trip))
+        cm = _COND_RE.search(s)
+        if cm:
+            out.append((cm.group(1), trip + 1))
+    elif " conditional(" in s:
+        bm = _BRANCH_RE.search(s)
+        if bm:
+            for name in bm.group(1).split(","):
+                out.append((name.strip().lstrip("%"), 1.0))
+    else:
+        cm = _CALL_RE.search(s)
+        if cm and (re.search(r" call\(", s) or "async-call" in s):
+            out.append((cm.group(1), 1.0))
+    return out
+
+
+def analyze(hlo: str) -> dict:
+    comps, entry = _parse_computations(hlo)
+    for c in comps.values():
+        _analyze_comp(c)
+
+    total = OpStats()
+    trip_counts = []
+
+    def walk(name: str, mult: float, depth: int = 0):
+        c = comps.get(name)
+        if c is None or depth > 64:
+            return
+        total.flops += c.stats.flops * mult
+        total.bytes += c.stats.bytes * mult
+        total.collective_bytes += c.stats.collective_bytes * mult
+        total.unresolved_dots += c.stats.unresolved_dots
+        for k, v in c.stats.collective_by_kind.items():
+            total.collective_by_kind[k] = (
+                total.collective_by_kind.get(k, 0) + v * mult)
+        for callee, m in c.calls:
+            if m > 1.0:
+                trip_counts.append(int(m))
+            walk(callee, mult * m, depth + 1)
+
+    if entry:
+        walk(entry, 1.0)
+    return {
+        "flops": total.flops,
+        "bytes": total.bytes,
+        "collective_bytes": total.collective_bytes,
+        "collective_by_kind": dict(total.collective_by_kind),
+        "trip_counts": sorted(set(trip_counts), reverse=True)[:16],
+        "n_computations": len(comps),
+        "unresolved_dots": total.unresolved_dots,
+    }

@@ -1,0 +1,81 @@
+"""Serving launcher: bring up the cloud engine + verification-aware
+scheduler for a trained model pair and serve a batch of requests across
+the chosen mode.
+
+  PYTHONPATH=src:. python -m repro.launch.serve --mode synera \
+      --budget 0.2 --requests 8 --max-new 48
+
+Modes: synera | edge | cloud | hybrid | edgefm.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", default="synera",
+                    choices=["synera", "edge", "cloud", "hybrid", "edgefm"])
+    ap.add_argument("--budget", type=float, default=0.2)
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--max-new", type=int, default=40)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--bandwidth-mbps", type=float, default=10.0)
+    ap.add_argument("--gamma", type=int, default=4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", action="store_true")
+    args = ap.parse_args()
+
+    from benchmarks import paper_claims as PC
+    from benchmarks.prepare import get_pair
+    from repro.core.offload import OffloadPolicy
+    from repro.serving import synergy as SY
+    from repro.serving.link import LinkModel
+
+    slm_cfg, slm_p, llm_cfg, llm_p, task = get_pair()
+    evalset = PC.eval_set(task, args.requests, seed=args.seed + 7)
+    prompts = [p for p, _ in evalset]
+    link = LinkModel(bandwidth_mbps=args.bandwidth_mbps)
+    eng = PC.make_engine(llm_cfg, llm_p, slots=args.slots)
+
+    if args.mode in ("synera", "hybrid", "edgefm"):
+        dev0 = PC.make_device(slm_cfg, slm_p, link=link, gamma=args.gamma,
+                              seed=args.seed)
+        profile, _ = PC.profile_pair(dev0, eng, evalset, task)
+        pol = OffloadPolicy(c_th=profile.c_th,
+                            i_th=profile.i_th_for_budget(args.budget),
+                            mode="both")
+        dev = PC.make_device(slm_cfg, slm_p, policy=pol, link=link,
+                             gamma=args.gamma, seed=args.seed,
+                             alpha=profile.alpha)
+    else:
+        dev = PC.make_device(slm_cfg, slm_p, link=link, gamma=args.gamma,
+                             seed=args.seed,
+                             policy=OffloadPolicy(mode="none"))
+
+    run = {
+        "synera": lambda: SY.run_synera(dev, eng, prompts, args.max_new),
+        "edge": lambda: SY.run_edge_centric(dev, prompts, args.max_new),
+        "cloud": lambda: SY.run_cloud_centric(eng, prompts, args.max_new,
+                                              link=link),
+        "hybrid": lambda: SY.run_hybrid(dev, eng, prompts, args.max_new),
+        "edgefm": lambda: SY.run_edgefm(dev, eng, prompts, args.max_new,
+                                        link=link),
+    }[args.mode]
+    r = run()
+    s = PC.score_outputs(task, evalset, r.outputs)
+    summary = dict(mode=args.mode, n=len(prompts), quality=s["quality"],
+                   copy_acc=s["copy_acc"], tbt_ms=r.tbt_ms, cost=r.cost,
+                   cloud_token_frac=r.cloud_token_frac)
+    if args.json:
+        print(json.dumps(summary))
+    else:
+        for k, v in summary.items():
+            print(f"{k:18s} {v}")
+
+
+if __name__ == "__main__":
+    main()

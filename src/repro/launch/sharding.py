@@ -1,0 +1,213 @@
+"""Sharding rules: parameter, optimizer-state, cache, and batch
+PartitionSpecs for the production mesh.
+
+Scheme (DESIGN.md §5):
+* tensor parallel over "model": attention head projections, FFN hidden,
+  MoE expert dim (expert parallel), vocab;
+* FSDP over "data" in train mode: the non-model-sharded major dim of
+  every large matrix (XLA all-gathers at use; halves-per-axis memory);
+* batch over ("pod","data") when divisible; "pod" is pure data parallel.
+
+Every rule checks divisibility and falls back to replication — GQA
+architectures with few KV heads replicate K/V (standard under TP), and
+serving KV caches shard the *sequence* dim over "model" (context
+parallelism) because head counts don't cover a 16-way axis while 32k+
+caches dominate HBM.
+
+``serve`` mode drops FSDP on params (pure TP + replication) — the
+paper-beyond optimization for decode (EXPERIMENTS.md §Perf) — except MoE
+expert banks, which stay sharded over ("data" x "model") to fit.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import axis_size, batch_axes
+
+
+def _div(n: int, size: int) -> bool:
+    return size > 1 and n % size == 0 and n >= size
+
+
+def _key_name(entry) -> str:
+    return str(getattr(entry, "key", getattr(entry, "idx", entry)))
+
+
+def param_spec(path, leaf, mesh, cfg, *, mode: str = "train",
+               fsdp: bool = True) -> P:
+    """PartitionSpec for one parameter leaf (path-based rules)."""
+    msz = axis_size(mesh, "model")
+    dsz = axis_size(mesh, "data")
+    names = [_key_name(p) for p in path]
+    name = names[-1]
+    shape = leaf.shape
+    nd = len(shape)
+    spec = [None] * nd
+    want_fsdp = fsdp and mode == "train"
+
+    def set_trailing(model_dim_offset, data_dim_offset):
+        """model_dim_offset/data_dim_offset: negative offsets from the end."""
+        mi = nd + model_dim_offset
+        di = nd + data_dim_offset
+        if mi >= 0 and _div(shape[mi], msz):
+            spec[mi] = "model"
+        if want_fsdp and di >= 0 and spec[di] is None and _div(shape[di], dsz):
+            spec[di] = "data"
+
+    is_moe_expert = ("moe" in names and "shared" not in names
+                     and name in ("w_gate", "w_up", "w_down"))
+
+    if name in ("wq", "wk", "wv"):
+        # (.., d, heads*hd): shard output heads over model (replicate K/V
+        # when n_kv*hd not divisible — the _div check handles it)
+        set_trailing(-1, -2)
+    elif name == "wo":
+        # (.., heads*hd, d): shard the contraction (head) dim over model
+        set_trailing(-2, -1)
+    elif is_moe_expert:
+        # (.., E, d, dff) / (.., E, dff, d).  Expert-parallel layout for
+        # the shard_map EP region (layers.moe_ffn_ep, §Perf iteration 3):
+        # E over "model" (each model rank owns its experts), d over
+        # "data" (FSDP: all-gathered per layer inside the region).  Memory
+        # per device: two 16-way shards — 400B Maverick fits at 3 GB/dev.
+        if _div(shape[-3], msz):
+            spec[-3] = "model"         # experts
+        di = nd - 1 if name == "w_down" else nd - 2
+        if _div(shape[di], dsz):
+            spec[di] = "data"          # expert d (FSDP-gathered in-region)
+    elif name in ("w_gate", "w_up"):
+        set_trailing(-1, -2)   # (.., d, dff): dff over model
+    elif name == "w_down":
+        set_trailing(-2, -1)   # (.., dff, d): dff over model
+    elif name == "router":
+        if want_fsdp and _div(shape[-2], dsz):
+            spec[-2] = "data"
+    elif name == "embed":
+        if _div(shape[0], msz):
+            spec[0] = "model"
+        if want_fsdp and _div(shape[1], dsz):
+            spec[1] = "data"
+    elif name == "unembed":
+        set_trailing(-1, -2)   # (d, V): vocab over model
+    elif name == "vision_proj":
+        set_trailing(-1, -2)
+    elif name == "in_proj":
+        set_trailing(-1, -2)   # mamba (d, 2di+2N+H)
+    elif name == "out_proj":
+        set_trailing(-2, -1)   # mamba (di, d)
+    elif name == "conv_w":
+        if _div(shape[-1], msz):
+            spec[-1] = "model"
+    elif name in ("bq", "bk", "bv"):
+        if _div(shape[-1], msz):
+            spec[-1] = "model"
+    # norms, gates, A_log, D, dt_bias, conv_b, gate_norm: replicated
+    return P(*spec)
+
+
+def params_shardings(mesh, cfg, params_avals, *, mode: str = "train",
+                     fsdp: bool = True):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_avals)
+    specs = [NamedSharding(mesh, param_spec(p, l, mesh, cfg, mode=mode,
+                                            fsdp=fsdp))
+             for p, l in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+# ---------------------------------------------------------------------------
+# Cache shardings (serving)
+# ---------------------------------------------------------------------------
+
+_SEQ_SHARD_THRESHOLD = 8 << 30  # bytes/device above which S must shard
+
+
+def cache_spec(path, leaf, mesh, cfg, batch: int, *, total_bytes: int = 0) -> P:
+    """KV/SSM cache leaves.
+
+    Layouts (leading layer/round axes never sharded):
+      k/v:   (..., B, S, nkv, hd)  -> B over data; S over model ONLY when
+                                      the batch-sharded cache exceeds the
+                                      per-device HBM budget.
+      pos:   (..., B, S)           -> follows k/v
+      state: (..., B, H, Pd, N)    -> B over data, H over model
+      conv:  (..., B, W-1, C)      -> B over data, C over model
+
+    §Perf iteration (decode hillclimb): scattering one decode token into
+    an S-sharded circular cache makes XLA all-gather the WHOLE cache
+    every step (17 GB/step for a 1B model — 3x the compute+memory terms).
+    Batch-only sharding keeps the scatter local; context(S)-parallelism
+    is reserved for caches that genuinely cannot fit (110B-class 32k
+    decode), where the gather is the price of fitting.
+    """
+    dsz = axis_size(mesh, "data")
+    msz = axis_size(mesh, "model")
+    name = _key_name(path[-1])
+    shape = leaf.shape
+    nd = len(shape)
+    spec = [None] * nd
+    if name in ("k", "v"):
+        bi, si = nd - 4, nd - 3
+    elif name == "pos":
+        bi, si = nd - 2, nd - 1
+    elif name == "state":
+        bi, si = nd - 4, nd - 3
+    elif name == "conv":
+        bi, si = nd - 3, nd - 1
+    else:
+        return P(*spec)
+    b_sharded = _div(shape[bi], dsz)
+    if b_sharded:
+        spec[bi] = "data"
+    if name in ("k", "v", "pos"):
+        per_dev = total_bytes // (dsz if b_sharded else 1)
+        if per_dev > _SEQ_SHARD_THRESHOLD and _div(shape[si], msz):
+            spec[si] = "model"
+    else:
+        if _div(shape[si], msz):
+            spec[si] = "model"
+    return P(*spec)
+
+
+def cache_shardings(mesh, cfg, cache_avals, batch: int):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_avals)
+    total_bytes = sum(l.size * l.dtype.itemsize for _, l in flat)
+    specs = [NamedSharding(mesh, cache_spec(p, l, mesh, cfg, batch,
+                                            total_bytes=total_bytes))
+             for p, l in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+# ---------------------------------------------------------------------------
+# Batch / activation shardings
+# ---------------------------------------------------------------------------
+
+def batch_spec(mesh, batch: int, nd: int) -> P:
+    """Shard the leading batch dim over as many data axes as divide it."""
+    axes = [a for a in batch_axes(mesh)]
+    total = 1
+    for a in axes:
+        total *= axis_size(mesh, a)
+    spec = [None] * nd
+    if batch % total == 0 and batch >= total:
+        spec[0] = tuple(axes) if len(axes) > 1 else axes[0]
+    elif batch % axis_size(mesh, "data") == 0 and batch >= axis_size(mesh, "data"):
+        spec[0] = "data"
+    return P(*spec)
+
+
+def logits_sharding(mesh, cfg, batch: int):
+    """(B, T, V) logits: batch over data axes, vocab over model.  Installed
+    as a with_sharding_constraint hint — without it XLA replicates the
+    unembed matmul across the model axis (measured 4.5x FLOP inflation)."""
+    msz = axis_size(mesh, "model")
+    bspec = batch_spec(mesh, batch, 3)
+    vdim = "model" if _div(cfg.vocab, msz) else None
+    return NamedSharding(mesh, P(bspec[0], None, vdim))
+
+
+def batch_shardings(mesh, tree_avals):
+    def one(leaf):
+        return NamedSharding(mesh, batch_spec(mesh, leaf.shape[0],
+                                              len(leaf.shape)))
+    return jax.tree.map(one, tree_avals)

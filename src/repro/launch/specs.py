@@ -1,0 +1,85 @@
+"""ShapeDtypeStruct stand-ins for every model input: the dry-run lowers
+against these (weak-type-correct, shardable, zero device allocation).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import INPUT_SHAPES, ModelConfig
+from repro.models import model as M
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def aux_specs(cfg: ModelConfig, batch: int) -> dict:
+    aux = {}
+    if cfg.family == "vlm":
+        aux["image_embeds"] = _sds((batch, cfg.n_image_tokens,
+                                    cfg.vision_dim), cfg.dtype)
+    if cfg.family == "audio":
+        aux["audio_frames"] = _sds((batch, cfg.n_audio_frames, cfg.d_model),
+                                   cfg.dtype)
+    return aux
+
+
+def params_specs(cfg: ModelConfig):
+    return jax.eval_shape(lambda k: M.init_params(cfg, k),
+                          jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+def cache_specs(cfg: ModelConfig, batch: int, s_max: int):
+    return jax.eval_shape(lambda: M.init_cache(cfg, batch, s_max))
+
+
+def cache_len_for(cfg: ModelConfig, shape_name: str) -> int:
+    """Attention cache buffer length for a decode shape: the full context
+    for decode_32k, the sliding window for long_500k (sub-quadratic path
+    for attention archs; SSM archs carry O(1) state regardless)."""
+    shp = INPUT_SHAPES[shape_name]
+    if shape_name == "long_500k":
+        return cfg.sliding_window
+    return shp.seq_len
+
+
+def decode_window_for(cfg: ModelConfig, shape_name: str) -> int:
+    return cfg.sliding_window if shape_name == "long_500k" else 0
+
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> dict:
+    """Everything a step function needs, as ShapeDtypeStructs.
+
+    train:   {batch: {tokens, [aux]}}
+    prefill: {cache, tokens, [aux]}
+    decode:  {cache, token (B,1), pos (B,1)}
+    verify:  {cache, tokens (B,C), pos (B,C)}  (the paper's partial prefill)
+    """
+    shp = INPUT_SHAPES[shape_name]
+    B, S = shp.global_batch, shp.seq_len
+    if shp.kind == "train":
+        batch = {"tokens": _sds((B, S), jnp.int32)}
+        batch.update(aux_specs(cfg, B))
+        return {"batch": batch}
+    if shp.kind == "prefill":
+        return {
+            "cache": cache_specs(cfg, B, S),
+            "tokens": _sds((B, S), jnp.int32),
+            "aux": aux_specs(cfg, B),
+        }
+    if shp.kind == "decode":
+        s_max = cache_len_for(cfg, shape_name)
+        return {
+            "cache": cache_specs(cfg, B, s_max),
+            "tokens": _sds((B, 1), jnp.int32),
+            "positions": _sds((B, 1), jnp.int32),
+        }
+    if shp.kind == "verify":
+        C = cfg.max_verify_chunk
+        return {
+            "cache": cache_specs(cfg, B, S),
+            "tokens": _sds((B, C), jnp.int32),
+            "positions": _sds((B, C), jnp.int32),
+        }
+    raise ValueError(shp.kind)

@@ -1,0 +1,530 @@
+"""Model assembly: parameter/cache init and family-dispatched forward.
+
+Six families (DESIGN.md §3): dense, moe, vlm, audio, ssm, hybrid.
+All layer stacks run under ``lax.scan`` over stacked parameters, so the
+HLO is O(1) in depth.  Caches are pytrees whose leaves carry a leading
+layer/round axis aligned with the scan.
+
+Conventions
+-----------
+* ``cache`` pytrees use ``{}`` (leaf-free dict) to mean "no cache" inside
+  scans; ``_none`` converts back to None at the layer level.
+* ``positions`` is always (B, T) int32 absolute positions.
+* forward(...) returns ``(logits, new_cache, importance, aux_loss)``.
+* ``window`` > 0 enables sliding-window attention over a circular cache
+  (the long_500k path for attention archs).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import layers as L
+from repro.models import shardctx
+
+
+def _none(c):
+    return c if c else None
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+
+def _init_dense_layer(key, cfg, *, ffn: str = "mlp", d_ff=None, mha=False):
+    k1, k2 = jax.random.split(key)
+    dt = _dtype(cfg)
+    nh = cfg.n_heads
+    nkv = nh if mha else cfg.n_kv_heads
+    p = {
+        "ln1": jnp.ones((cfg.d_model,), dt),
+        "ln2": jnp.ones((cfg.d_model,), dt),
+        "attn": L.init_attn(k1, cfg.d_model, nh, nkv, cfg.head_dim,
+                            bias=cfg.qkv_bias, dtype=dt),
+    }
+    dff = d_ff if d_ff is not None else cfg.d_ff
+    if ffn == "mlp":
+        p["mlp"] = L.init_mlp(k2, cfg.d_model, dff, dtype=dt)
+    else:
+        p["moe"] = L.init_moe(k2, cfg.d_model, dff, cfg.n_experts,
+                              n_shared=cfg.n_shared_experts, dtype=dt)
+    return p
+
+
+def _init_cross_layer(key, cfg):
+    k1, k2 = jax.random.split(key)
+    dt = _dtype(cfg)
+    return {
+        "ln1": jnp.ones((cfg.d_model,), dt),
+        "ln2": jnp.ones((cfg.d_model,), dt),
+        "attn": L.init_attn(k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                            cfg.head_dim, bias=cfg.qkv_bias, dtype=dt),
+        "gate_attn": jnp.zeros((1,), dt),
+        "gate_ffn": jnp.zeros((1,), dt),
+        "mlp": L.init_mlp(k2, cfg.d_model, cfg.d_ff, dtype=dt),
+    }
+
+
+def _init_encdec_layer(key, cfg):
+    k1, k2, k3 = jax.random.split(key, 3)
+    dt = _dtype(cfg)
+    return {
+        "ln1": jnp.ones((cfg.d_model,), dt),
+        "lnx": jnp.ones((cfg.d_model,), dt),
+        "ln2": jnp.ones((cfg.d_model,), dt),
+        "self_attn": L.init_attn(k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                 cfg.head_dim, dtype=dt),
+        "cross_attn": L.init_attn(k2, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                  cfg.head_dim, dtype=dt),
+        "mlp": L.init_mlp(k3, cfg.d_model, cfg.d_ff, dtype=dt),
+    }
+
+
+def _stacked(init_fn, key, n, *a, **kw):
+    keys = jax.random.split(key, n)
+    return jax.vmap(lambda k: init_fn(k, *a, **kw))(keys)
+
+
+def init_params(cfg, key):
+    dt = _dtype(cfg)
+    ke, ku, kl, kx = jax.random.split(key, 4)
+    V, d = cfg.vocab, cfg.d_model
+    params = {
+        "embed": (jax.random.normal(ke, (V, d)) * 0.02).astype(dt),
+        "final_norm": jnp.ones((d,), dt),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = (jax.random.normal(ku, (d, V)) / math.sqrt(d)).astype(dt)
+
+    fam = cfg.family
+    if fam == "dense":
+        params["layers"] = _stacked(_init_dense_layer, kl, cfg.n_layers, cfg)
+    elif fam == "moe":
+        if cfg.moe_every == 1:
+            params["layers"] = _stacked(_init_dense_layer, kl, cfg.n_layers,
+                                        cfg, ffn="moe")
+        else:
+            n_rounds = cfg.n_layers // cfg.moe_every
+            k1, k2 = jax.random.split(kl)
+            params["dense_layers"] = _stacked(
+                _init_dense_layer, k1, n_rounds, cfg, ffn="mlp",
+                d_ff=cfg.d_ff_dense)
+            params["moe_layers"] = _stacked(
+                _init_dense_layer, k2, n_rounds, cfg, ffn="moe")
+    elif fam == "vlm":
+        n_rounds = cfg.n_layers // cfg.cross_attn_every
+        self_per = cfg.cross_attn_every - 1
+        k1, k2 = jax.random.split(kl)
+        keys = jax.random.split(k1, n_rounds)
+        params["self_layers"] = jax.vmap(
+            lambda k: _stacked(_init_dense_layer, k, self_per, cfg))(keys)
+        params["cross_layers"] = _stacked(_init_cross_layer, k2, n_rounds, cfg)
+        params["vision_proj"] = (
+            jax.random.normal(kx, (cfg.vision_dim, d)) / math.sqrt(cfg.vision_dim)
+        ).astype(dt)
+    elif fam == "audio":
+        k1, k2 = jax.random.split(kl)
+        params["enc_layers"] = _stacked(_init_dense_layer, k1,
+                                        cfg.n_encoder_layers, cfg)
+        params["enc_norm"] = jnp.ones((d,), dt)
+        params["dec_layers"] = _stacked(_init_encdec_layer, k2, cfg.n_layers, cfg)
+    elif fam == "ssm":
+        params["layers"] = _stacked(L.init_mamba, kl, cfg.n_layers, cfg, dtype=dt)
+    elif fam == "hybrid":
+        n_rounds = cfg.n_layers // cfg.attn_every
+        keys = jax.random.split(kl, n_rounds)
+        params["mamba_rounds"] = jax.vmap(
+            lambda k: _stacked(L.init_mamba, k, cfg.attn_every, cfg, dtype=dt))(keys)
+        params["shared_attn"] = _init_dense_layer(kx, cfg, mha=True)
+    else:
+        raise ValueError(f"unknown family {fam}")
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Cache init
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch: int, s_max: int):
+    """Serving cache. ``s_max`` is the attention buffer length (the
+    sliding window size for long-context decode)."""
+    dt = _dtype(cfg)
+    hd, nkv = cfg.head_dim, cfg.n_kv_heads
+
+    def kv_stack(n):
+        return {
+            "k": jnp.zeros((n, batch, s_max, nkv, hd), dt),
+            "v": jnp.zeros((n, batch, s_max, nkv, hd), dt),
+            "pos": jnp.full((n, batch, s_max), -1, jnp.int32),
+        }
+
+    fam = cfg.family
+    if fam == "dense":
+        return {"layers": kv_stack(cfg.n_layers)}
+    if fam == "moe":
+        if cfg.moe_every == 1:
+            return {"layers": kv_stack(cfg.n_layers)}
+        n_rounds = cfg.n_layers // cfg.moe_every
+        return {"dense": kv_stack(n_rounds), "moe": kv_stack(n_rounds)}
+    if fam == "vlm":
+        n_rounds = cfg.n_layers // cfg.cross_attn_every
+        self_per = cfg.cross_attn_every - 1
+        sc = kv_stack(n_rounds * self_per)
+        sc = jax.tree.map(
+            lambda x: x.reshape((n_rounds, self_per) + x.shape[1:]), sc)
+        cross = {
+            "k": jnp.zeros((n_rounds, batch, cfg.n_image_tokens, nkv, hd), dt),
+            "v": jnp.zeros((n_rounds, batch, cfg.n_image_tokens, nkv, hd), dt),
+        }
+        return {"self": sc, "cross": cross}
+    if fam == "audio":
+        cross = {
+            "k": jnp.zeros((cfg.n_layers, batch, cfg.n_audio_frames, nkv, hd), dt),
+            "v": jnp.zeros((cfg.n_layers, batch, cfg.n_audio_frames, nkv, hd), dt),
+        }
+        return {"self": kv_stack(cfg.n_layers), "cross": cross}
+    if fam == "ssm":
+        def one(_):
+            return L.init_mamba_cache(cfg, batch, dt)
+        return {"layers": jax.vmap(one)(jnp.arange(cfg.n_layers))}
+    if fam == "hybrid":
+        n_rounds = cfg.n_layers // cfg.attn_every
+        def one(_):
+            return L.init_mamba_cache(cfg, batch, dt)
+        mam = jax.vmap(one)(jnp.arange(cfg.n_layers))
+        mam = jax.tree.map(
+            lambda x: x.reshape((n_rounds, cfg.attn_every) + x.shape[1:]), mam)
+        return {"mamba": mam, "attn": kv_stack(n_rounds)}
+    raise ValueError(fam)
+
+
+# ---------------------------------------------------------------------------
+# Layer application
+# ---------------------------------------------------------------------------
+
+def _layer(cfg, p, h, pos, cache, *, window=0, ret_imp=False, ffn="mlp",
+           mha=False):
+    a_in = L.rms_norm(h, p["ln1"], cfg.norm_eps)
+    a, nc, imp = L.attn_block(
+        p["attn"], a_in, pos, cfg, cache, window=window,
+        return_importance=ret_imp,
+        n_heads=cfg.n_heads, n_kv=cfg.n_heads if mha else cfg.n_kv_heads)
+    h = h + a
+    f_in = L.rms_norm(h, p["ln2"], cfg.norm_eps)
+    if ffn == "mlp":
+        f, aux = L.mlp(p["mlp"], f_in), jnp.zeros((), jnp.float32)
+    else:
+        # expert-parallel shard_map path when a mesh hint is installed;
+        # single-host auto path otherwise (layers.moe_ffn_ep falls back)
+        f, aux = L.moe_ffn_ep(p["moe"], f_in, top_k=cfg.top_k)
+    return h + f, nc, imp, aux
+
+
+def _cross_attn(cfg, p, x, kv_src=None, cross_cache=None):
+    nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    B, T, _ = x.shape
+    q = x @ p["wq"]
+    if "bq" in p:
+        q = q + p["bq"]
+    q = q.reshape(B, T, nh, hd)
+    if kv_src is not None:
+        S = kv_src.shape[1]
+        k = kv_src @ p["wk"]
+        v = kv_src @ p["wv"]
+        if "bk" in p:
+            k = k + p["bk"]
+            v = v + p["bv"]
+        k = k.reshape(B, S, nkv, hd)
+        v = v.reshape(B, S, nkv, hd)
+        new_cache = None
+        if cross_cache is not None:
+            new_cache = {"k": k.astype(cross_cache["k"].dtype),
+                         "v": v.astype(cross_cache["v"].dtype)}
+    else:
+        k, v = cross_cache["k"], cross_cache["v"]
+        new_cache = cross_cache
+    qpos = jnp.zeros((B, T), jnp.int32)
+    kvpos = jnp.zeros((B, k.shape[1]), jnp.int32)
+    out, _ = L.attention(q, k, v, qpos, kvpos, impl=cfg.attn_impl,
+                         block_kv=cfg.attn_block_kv, causal=False)
+    out = out.reshape(B, T, nh * hd) @ p["wo"]
+    return out, new_cache
+
+
+def _cross_layer(cfg, p, h, kv_src, cross_cache):
+    a_in = L.rms_norm(h, p["ln1"], cfg.norm_eps)
+    a, ncc = _cross_attn(cfg, p["attn"], a_in, kv_src, cross_cache)
+    h = h + jnp.tanh(p["gate_attn"].astype(jnp.float32)).astype(h.dtype) * a
+    f_in = L.rms_norm(h, p["ln2"], cfg.norm_eps)
+    f = L.mlp(p["mlp"], f_in)
+    h = h + jnp.tanh(p["gate_ffn"].astype(jnp.float32)).astype(h.dtype) * f
+    return h, (ncc if ncc is not None else {})
+
+
+def _encdec_layer(cfg, p, h, pos, self_cache, kv_src, cross_cache, *,
+                  window=0, ret_imp=False):
+    a_in = L.rms_norm(h, p["ln1"], cfg.norm_eps)
+    a, nsc, imp = L.attn_block(p["self_attn"], a_in, pos, cfg, self_cache,
+                               window=window, return_importance=ret_imp)
+    h = h + a
+    x_in = L.rms_norm(h, p["lnx"], cfg.norm_eps)
+    xa, ncc = _cross_attn(cfg, p["cross_attn"], x_in, kv_src, cross_cache)
+    h = h + xa
+    f_in = L.rms_norm(h, p["ln2"], cfg.norm_eps)
+    return h + L.mlp(p["mlp"], f_in), nsc, ncc, imp
+
+
+# ---------------------------------------------------------------------------
+# Family backbones (scan over stacked layers)
+# ---------------------------------------------------------------------------
+
+def _maybe_ckpt(body, cfg, cache):
+    return jax.checkpoint(body) if (cfg.remat and not cache) else body
+
+
+def _uniform_stack(cfg, layers_p, h, pos, lcache, *, window, ret_imp, ffn):
+    def body(carry, xs):
+        hh, aux = carry
+        lp, lc = xs
+        hh, nc, imp, a = _layer(cfg, lp, hh, pos, _none(lc), window=window,
+                                ret_imp=ret_imp, ffn=ffn)
+        return (hh, aux + a), (nc if nc is not None else {},
+                               imp if ret_imp else {})
+    xs = (layers_p, lcache if lcache else {})
+    (h, aux), (ncache, imps) = lax.scan(_maybe_ckpt(body, cfg, lcache),
+                                        (h, jnp.zeros((), jnp.float32)), xs)
+    imp = imps.mean(axis=0) if ret_imp else None
+    return h, ncache, imp, aux
+
+
+def _moe_interleaved(cfg, params, h, pos, cache, *, window, ret_imp):
+    dcache = cache["dense"] if cache else {}
+    mcache = cache["moe"] if cache else {}
+
+    def body(carry, xs):
+        hh, aux = carry
+        dp, mp, dc, mc = xs
+        hh, ndc, imp1, a1 = _layer(cfg, dp, hh, pos, _none(dc), window=window,
+                                   ret_imp=ret_imp, ffn="mlp")
+        hh, nmc, imp2, a2 = _layer(cfg, mp, hh, pos, _none(mc), window=window,
+                                   ret_imp=ret_imp, ffn="moe")
+        imp = (imp1 + imp2) / 2 if ret_imp else {}
+        return (hh, aux + a1 + a2), (ndc if ndc is not None else {},
+                                     nmc if nmc is not None else {}, imp)
+    xs = (params["dense_layers"], params["moe_layers"], dcache, mcache)
+    (h, aux), (ndc, nmc, imps) = lax.scan(
+        _maybe_ckpt(body, cfg, cache), (h, jnp.zeros((), jnp.float32)), xs)
+    ncache = {"dense": ndc, "moe": nmc} if cache else {}
+    imp = imps.mean(axis=0) if ret_imp else None
+    return h, ncache, imp, aux
+
+
+def _vlm_backbone(cfg, params, h, pos, cache, img_embeds, *, window, ret_imp):
+    kv_src = None
+    if img_embeds is not None:
+        kv_src = (img_embeds @ params["vision_proj"]).astype(h.dtype)
+    scache = cache["self"] if cache else {}
+    ccache = cache["cross"] if cache else {}
+
+    def round_body(carry, xs):
+        hh, aux = carry
+        sp, cp, sc, cc = xs
+
+        def inner(c2, xs2):
+            h2, a2 = c2
+            lp, lc = xs2
+            h2, nc, imp, a = _layer(cfg, lp, h2, pos, _none(lc), window=window,
+                                    ret_imp=ret_imp)
+            return (h2, a2 + a), (nc if nc is not None else {},
+                                  imp if ret_imp else {})
+        (hh, aux), (nsc, imps) = lax.scan(inner, (hh, aux),
+                                          (sp, sc if sc else {}))
+        if img_embeds is not None:
+            hh, ncc = _cross_layer(cfg, cp, hh, kv_src,
+                                   _none(cc) if cache else None)
+        else:
+            hh, ncc = _cross_layer(cfg, cp, hh, None, _none(cc))
+        return (hh, aux), (nsc, ncc, imps if ret_imp else {})
+
+    xs = (params["self_layers"], params["cross_layers"], scache, ccache)
+    (h, aux), (nsc, ncc, imps) = lax.scan(
+        _maybe_ckpt(round_body, cfg, cache), (h, jnp.zeros((), jnp.float32)), xs)
+    ncache = {"self": nsc, "cross": ncc} if cache else {}
+    imp = imps.mean(axis=(0, 1)) if ret_imp else None
+    return h, ncache, imp, aux
+
+
+def _audio_encoder(cfg, params, frames):
+    B, Ta, _ = frames.shape
+    pos = jnp.broadcast_to(jnp.arange(Ta, dtype=jnp.int32)[None], (B, Ta))
+
+    def body(hh, lp):
+        a_in = L.rms_norm(hh, lp["ln1"], cfg.norm_eps)
+        a, _, _ = L.attn_block(lp["attn"], a_in, pos, cfg, None, causal=False)
+        hh = hh + a
+        f_in = L.rms_norm(hh, lp["ln2"], cfg.norm_eps)
+        return hh + L.mlp(lp["mlp"], f_in), None
+
+    body = jax.checkpoint(body) if cfg.remat else body
+    h, _ = lax.scan(body, frames, params["enc_layers"])
+    return L.rms_norm(h, params["enc_norm"], cfg.norm_eps)
+
+
+def _audio_backbone(cfg, params, h, pos, cache, frames, *, window, ret_imp):
+    kv_src = _audio_encoder(cfg, params, frames) if frames is not None else None
+    scache = cache["self"] if cache else {}
+    ccache = cache["cross"] if cache else {}
+
+    def body(carry, xs):
+        hh = carry
+        lp, sc, cc = xs
+        hh, nsc, ncc, imp = _encdec_layer(
+            cfg, lp, hh, pos, _none(sc), kv_src,
+            _none(cc) if (cache or kv_src is None) else None,
+            window=window, ret_imp=ret_imp)
+        return hh, (nsc if nsc is not None else {},
+                    ncc if ncc is not None else {},
+                    imp if ret_imp else {})
+
+    xs = (params["dec_layers"], scache, ccache)
+    h, (nsc, ncc, imps) = lax.scan(_maybe_ckpt(body, cfg, cache), h, xs)
+    ncache = {"self": nsc, "cross": ncc} if cache else {}
+    imp = imps.mean(axis=0) if ret_imp else None
+    return h, ncache, imp, jnp.zeros((), jnp.float32)
+
+
+def _ssm_backbone(cfg, params, h, pos, cache, *, ret_imp):
+    del pos
+
+    def body(hh, xs):
+        lp, lc = xs
+        out, nc, imp = L.mamba_block(lp, cfg, hh, _none(lc),
+                                     return_importance=ret_imp)
+        return hh + out, (nc if nc is not None else {},
+                          imp if ret_imp else {})
+    xs = (params["layers"], cache["layers"] if cache else {})
+    h, (nc, imps) = lax.scan(_maybe_ckpt(body, cfg, cache), h, xs)
+    ncache = {"layers": nc} if cache else {}
+    imp = imps.mean(axis=0) if ret_imp else None
+    return h, ncache, imp, jnp.zeros((), jnp.float32)
+
+
+def _hybrid_backbone(cfg, params, h, pos, cache, *, window, ret_imp):
+    mcache = cache["mamba"] if cache else {}
+    acache = cache["attn"] if cache else {}
+    shared = params["shared_attn"]
+
+    def round_body(carry, xs):
+        hh = carry
+        mp, mc, ac = xs
+
+        def inner(h2, xs2):
+            lp, lc = xs2
+            out, nc, imp = L.mamba_block(lp, cfg, h2, _none(lc),
+                                         return_importance=ret_imp)
+            return h2 + out, (nc if nc is not None else {},
+                              imp if ret_imp else {})
+        hh, (nmc, imps_m) = lax.scan(inner, hh, (mp, mc if mc else {}))
+        hh, nac, imp_a, _ = _layer(cfg, shared, hh, pos, _none(ac),
+                                   window=window, ret_imp=ret_imp, mha=True)
+        if ret_imp:
+            imp = (imps_m.mean(axis=0) + imp_a) / 2
+        else:
+            imp = {}
+        return hh, (nmc, nac if nac is not None else {}, imp)
+
+    xs = (params["mamba_rounds"], mcache, acache)
+    h, (nmc, nac, imps) = lax.scan(_maybe_ckpt(round_body, cfg, cache), h, xs)
+    ncache = {"mamba": nmc, "attn": nac} if cache else {}
+    imp = imps.mean(axis=0) if ret_imp else None
+    return h, ncache, imp, jnp.zeros((), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Top-level forward
+# ---------------------------------------------------------------------------
+
+def forward(cfg, params, tokens, positions, cache=None, aux_inputs=None, *,
+            window: int = 0, return_importance: bool = False):
+    """tokens: (B, T) int32; positions: (B, T) int32.
+
+    Returns (logits (B, T, V), new_cache, importance, aux_loss).
+    """
+    aux_inputs = aux_inputs or {}
+    h = jnp.take(params["embed"], tokens, axis=0)
+    fam = cfg.family
+    kw = dict(window=window, ret_imp=return_importance)
+
+    if fam == "dense":
+        h, nc, imp, aux = _uniform_stack(cfg, params["layers"], h, positions,
+                                         cache["layers"] if cache else {},
+                                         ffn="mlp", **kw)
+        nc = {"layers": nc} if cache else {}
+    elif fam == "moe":
+        if cfg.moe_every == 1:
+            h, nc, imp, aux = _uniform_stack(
+                cfg, params["layers"], h, positions,
+                cache["layers"] if cache else {}, ffn="moe", **kw)
+            nc = {"layers": nc} if cache else {}
+        else:
+            h, nc, imp, aux = _moe_interleaved(cfg, params, h, positions,
+                                               cache, **kw)
+    elif fam == "vlm":
+        h, nc, imp, aux = _vlm_backbone(cfg, params, h, positions, cache,
+                                        aux_inputs.get("image_embeds"), **kw)
+    elif fam == "audio":
+        h, nc, imp, aux = _audio_backbone(cfg, params, h, positions, cache,
+                                          aux_inputs.get("audio_frames"), **kw)
+    elif fam == "ssm":
+        h, nc, imp, aux = _ssm_backbone(cfg, params, h, positions, cache,
+                                        ret_imp=return_importance)
+    elif fam == "hybrid":
+        h, nc, imp, aux = _hybrid_backbone(cfg, params, h, positions, cache,
+                                           **kw)
+    else:
+        raise ValueError(fam)
+
+    h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = h @ params["embed"].T
+    else:
+        logits = h @ params["unembed"]
+    logits = shardctx.constrain(logits, "logits")
+    return logits, (nc if cache else None), imp, aux
+
+
+def default_positions(batch: int, seq: int):
+    return jnp.broadcast_to(jnp.arange(seq, dtype=jnp.int32)[None], (batch, seq))
+
+
+# ---------------------------------------------------------------------------
+# Training loss
+# ---------------------------------------------------------------------------
+
+def lm_loss(cfg, params, batch, *, aux_weight: float = 0.01):
+    """Next-token cross-entropy (+ MoE load-balance aux loss)."""
+    tokens = batch["tokens"]
+    B, T = tokens.shape
+    pos = default_positions(B, T)
+    aux_inputs = {k: batch[k] for k in ("image_embeds", "audio_frames")
+                  if k in batch}
+    logits, _, _, aux = forward(cfg, params, tokens, pos,
+                                aux_inputs=aux_inputs)
+    logits = logits[:, :-1]
+    targets = tokens[:, 1:]
+    # cross entropy via logsumexp without materializing a f32 copy of the
+    # full (B, T, V) logits (that copy dominated train-step HBM: 537 GB
+    # global for a 128k vocab at 1M tokens)
+    lse = jax.scipy.special.logsumexp(logits.astype(jnp.float32), axis=-1)
+    tgt = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = lse - tgt.astype(jnp.float32)
+    loss = nll.mean()
+    return loss + aux_weight * aux, {"nll": loss, "aux": aux}

@@ -1,0 +1,67 @@
+"""Optional sharding hints for model internals.
+
+The model code is mesh-agnostic; launchers (dryrun/train/serve) install
+NamedSharding hints here and ``constrain`` applies
+``with_sharding_constraint`` where XLA's propagation is known to go wrong
+(e.g. the (B, T, V) logits matmul replicating across the model axis —
+a measured 4.5x per-device FLOP inflation, see EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+_HINTS: dict = {}
+
+
+def set_hints(**hints):
+    _HINTS.update({k: v for k, v in hints.items() if v is not None})
+
+
+def clear_hints():
+    _HINTS.clear()
+
+
+@contextlib.contextmanager
+def hints(**kw):
+    old = dict(_HINTS)
+    set_hints(**kw)
+    try:
+        yield
+    finally:
+        _HINTS.clear()
+        _HINTS.update(old)
+
+
+def constrain(x, name: str):
+    h = _HINTS.get(name)
+    if h is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, h)
+
+
+def get(name: str):
+    return _HINTS.get(name)
+
+
+def constrain_batch_dim(x, dim: int):
+    """Constrain axis ``dim`` of x to the batch axes and everything else
+    replicated.  Used inside the blocked-attention KV scan: without it
+    XLA shards the scan (block) axis itself across devices, then pays an
+    'involuntary full rematerialization' per slice and replicates the
+    whole attention computation (measured 16x FLOP inflation)."""
+    from jax.sharding import NamedSharding, PartitionSpec
+    h = _HINTS.get("mesh_batch_axes")
+    if h is None:
+        return x
+    mesh, axes = h
+    total = 1
+    for a in axes:
+        total *= dict(zip(mesh.axis_names, mesh.devices.shape))[a]
+    if x.shape[dim] % total != 0 or x.shape[dim] < total:
+        return x
+    spec = [None] * x.ndim
+    spec[dim] = axes if len(axes) > 1 else axes[0]
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, PartitionSpec(*spec)))

@@ -1,0 +1,126 @@
+"""Step factories: the jit-able entry points used by the launcher, the
+serving engine, and the multi-pod dry-run.
+
+Every factory closes over the static config and returns a pure function
+of (params, state/batch) suitable for ``jax.jit(..., in_shardings=...)``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+
+
+def make_train_step(cfg, optimizer, *, micro_batches: int = 1):
+    """(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    micro_batches > 1 enables in-step gradient accumulation (§Perf
+    iteration 7): the global batch is scanned in micro-batches so live
+    activations shrink by the accumulation factor (94-layer 235B MoE at
+    1M tokens needs ~147 GiB/device of activations without it; v5e HBM
+    is 16 GiB).  Semantics are identical up to f32 grad-mean order.
+    """
+
+    def grad_fn(params, batch):
+        return jax.value_and_grad(
+            lambda p: M.lm_loss(cfg, p, batch), has_aux=True)(params)
+
+    def train_step(params, opt_state, batch):
+        if micro_batches == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            mbatch = jax.tree.map(
+                lambda x: x.reshape((micro_batches,
+                                     x.shape[0] // micro_batches)
+                                    + x.shape[1:]), batch)
+
+            def body(acc, mb):
+                (loss_i, metrics_i), g = grad_fn(params, mb)
+                acc = jax.tree.map(
+                    lambda a, gg: a + gg.astype(jnp.float32), acc, g)
+                return acc, (loss_i, metrics_i)
+
+            acc0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            grads, (losses, metricses) = jax.lax.scan(body, acc0, mbatch)
+            grads = jax.tree.map(lambda g: g / micro_batches, grads)
+            loss = losses.mean()
+            metrics = jax.tree.map(lambda x: x.mean(), metricses)
+        params, opt_state, opt_m = optimizer.update(grads, opt_state, params)
+        metrics = dict(metrics, loss=loss, **opt_m)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_loss_fn(cfg):
+    def loss_fn(params, batch):
+        loss, metrics = M.lm_loss(cfg, params, batch)
+        return loss, metrics
+    return loss_fn
+
+
+def make_prefill_step(cfg):
+    """(params, cache, tokens, aux) -> (logits_last, cache).
+
+    tokens: (B, T).  Fills the KV/SSM cache and returns last-position
+    logits (the serving prefill).
+    """
+
+    def prefill(params, cache, tokens, aux_inputs=None):
+        B, T = tokens.shape
+        pos = M.default_positions(B, T)
+        logits, cache, _, _ = M.forward(cfg, params, tokens, pos, cache=cache,
+                                        aux_inputs=aux_inputs)
+        return logits[:, -1], cache
+
+    return prefill
+
+
+def make_decode_step(cfg, *, window: int = 0):
+    """(params, cache, token (B,1), pos (B,1)) -> (logits (B,V), cache).
+
+    One auto-regressive step against the cache; ``window`` > 0 selects
+    sliding-window attention over a circular cache (long-context decode).
+    """
+
+    def decode(params, cache, token, pos):
+        logits, cache, _, _ = M.forward(cfg, params, token, pos, cache=cache,
+                                        window=window)
+        return logits[:, -1], cache
+
+    return decode
+
+
+def make_verify_step(cfg, *, window: int = 0):
+    """The paper's partial prefill (§4.5): a chunk of `uncached accepted
+    tokens + pending-verify draft tokens` is forwarded over a KV-cached
+    prefix.  Returns per-position logits for the verifier.
+
+    tokens: (B, C) chunk; pos: (B, C) absolute positions (contiguous,
+    starting at each request's cached length).
+    """
+
+    def verify(params, cache, tokens, pos):
+        logits, cache, _, _ = M.forward(cfg, params, tokens, pos, cache=cache,
+                                        window=window)
+        return logits, cache
+
+    return verify
+
+
+def make_device_draft_step(cfg):
+    """Device-side SLM forward for a draft chunk: returns logits,
+    updated cache, and the paper's importance scores (column sums of the
+    attention matrix over the cache).  Uses the naive attention path
+    because importance requires materializing the matrix (or the fused
+    Pallas kernel on TPU)."""
+    dev_cfg = cfg.replace(attn_impl="naive")
+
+    def draft(params, cache, tokens, pos):
+        logits, cache, imp, _ = M.forward(dev_cfg, params, tokens, pos,
+                                          cache=cache, return_importance=True)
+        return logits, cache, imp
+
+    return draft

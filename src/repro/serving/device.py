@@ -1,0 +1,369 @@
+"""Device-side SLM runtime (Synera §4.2-§4.4).
+
+Runs the on-device SLM with:
+  * per-step confidence + importance extraction (naive attention path or
+    the fused Pallas kernel on TPU),
+  * layer-wise early exit (margin over the last 25% of layers) — on this
+    CPU container all layers execute and the exit *decision* feeds the
+    latency/energy model (DESIGN.md §2),
+  * draft chunking (gamma tokens) + selective offload decisions,
+  * compression of the transmitted distributions,
+  * stall-free parallel inference (rejection-position prediction + PI).
+
+Position bookkeeping invariant: ``seq`` is the accepted token stream
+(prompt + output).  At the top of every loop iteration, positions
+0..len(seq)-2 are in the device cache and ``seq[-1]`` is not yet fed.
+Drafting feeds ``seq[-1]`` at position len(seq)-1 and autoregressively
+produces gamma draft tokens.  After a rejection, stale draft KV beyond
+the accepted frontier is masked by causality until overwritten (the same
+argument as the cloud scheduler's).
+
+The SLM must be a dense decoder (the paper's SLMs are Llama-family).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import compression as CP
+from repro.core import early_exit as EE
+from repro.core import parallel as PI
+from repro.core.offload import OffloadPolicy
+from repro.core.profiling import ChunkRecord
+from repro.models import layers as L
+from repro.models import model as M
+from repro.serving.link import DeviceLatencyModel, LinkModel, Timeline
+
+
+@dataclass
+class DeviceMetrics:
+    tokens: list = field(default_factory=list)
+    n_chunks: int = 0
+    n_offloaded: int = 0
+    n_draft_tokens: int = 0
+    n_accepted_tokens: int = 0
+    n_cloud_tokens: int = 0        # tokens emitted via cloud verification
+    n_cloud_fed_tokens: int = 0    # tokens forwarded through the cloud LLM
+    n_local_tokens: int = 0
+    pi_position_hits: int = 0
+    pi_adopted: int = 0
+    pi_attempts: int = 0
+    layers_saved_frac: list = field(default_factory=list)
+    uplink_bytes: int = 0
+    downlink_bytes: int = 0
+    chunk_records: list = field(default_factory=list)
+    timeline: Timeline = field(default_factory=Timeline)
+
+    @property
+    def offload_rate(self) -> float:
+        return self.n_offloaded / max(self.n_chunks, 1)
+
+    @property
+    def acceptance_rate(self) -> float:
+        return self.n_accepted_tokens / max(self.n_draft_tokens, 1)
+
+    @property
+    def tbt_ms(self) -> float:
+        return self.timeline.t_ms / max(len(self.tokens), 1)
+
+    @property
+    def cloud_token_frac(self) -> float:
+        return self.n_cloud_tokens / max(len(self.tokens), 1)
+
+    @property
+    def mean_layers_saved(self) -> float:
+        return float(np.mean(self.layers_saved_frac)) if self.layers_saved_frac else 0.0
+
+
+def _make_device_step(cfg):
+    """jit-able single-token step returning per-layer last-position logits
+    (for early exit), mean importance over the cache, and the new cache."""
+
+    def step(params, cache, token, pos):
+        h = jnp.take(params["embed"], token, axis=0)  # (1, 1, d)
+
+        def body(hh, xs):
+            lp, lc = xs
+            hn, nc, imp, _ = M._layer(cfg, lp, hh, pos, lc, ret_imp=True)
+            return hn, (nc, imp, hn[:, -1])
+
+        _, (ncache, imps, h_layers) = lax.scan(
+            body, h, (params["layers"], cache["layers"]))
+        hl = L.rms_norm(h_layers, params["final_norm"], cfg.norm_eps)  # (L,1,d)
+        unemb = (params["embed"].T if cfg.tie_embeddings
+                 else params["unembed"])
+        layer_logits = (hl @ unemb)[:, 0]           # (L, V)
+        imp_mean = imps.mean(axis=0)[0]             # (S,) over cache slots
+        return layer_logits, imp_mean, {"layers": ncache}
+
+    return step
+
+
+class DeviceRuntime:
+    def __init__(self, cfg, params, *, s_max: int = 512, gamma: int = 4,
+                 policy: OffloadPolicy | None = None,
+                 ee: EE.EarlyExitConfig | None = None,
+                 sampling: str = "greedy", comp_top_k: int = 8,
+                 latency: DeviceLatencyModel | None = None,
+                 link: LinkModel | None = None, seed: int = 0,
+                 use_early_exit: bool = True, use_pi: bool = True,
+                 use_compression: bool = True, alpha: float = 0.7,
+                 wire_vocab: int = 0):
+        assert cfg.family == "dense", "device SLM must be a dense decoder"
+        self.cfg = cfg.replace(attn_impl="naive", remat=False)
+        self.params = params
+        self.s_max = s_max
+        self.gamma = gamma
+        self.policy = policy or OffloadPolicy()
+        self.ee = ee or EE.EarlyExitConfig()
+        self.sampling = sampling
+        self.comp_top_k = comp_top_k
+        self.latency = latency or DeviceLatencyModel()
+        self.link = link or LinkModel()
+        self.rng = np.random.default_rng(seed)
+        self.seed = seed
+        self.use_early_exit = use_early_exit
+        self.use_pi = use_pi
+        self.use_compression = use_compression
+        self.alpha = alpha
+        # Payload accounting vocab: the experiments use a tiny task vocab,
+        # but the WAN transfer sizes of the paper (Fig 13) are set by a
+        # production vocab (32,000 for Llama-2).  ``wire_vocab`` sizes the
+        # *uncompressed* distribution payload accordingly; the compressed
+        # payload only depends on the sampling support (top-k), so this
+        # affects exactly what it should.
+        self.wire_vocab = wire_vocab or self.cfg.vocab
+
+        self._step = jax.jit(_make_device_step(self.cfg))
+        self._prefill = jax.jit(
+            lambda p, c, t, pos: M.forward(self.cfg, p, t, pos, cache=c)[:2])
+
+    # ------------------------------------------------------------------
+    def _sample(self, logits: np.ndarray) -> int:
+        if self.sampling == "greedy":
+            return int(np.argmax(logits))
+        c = CP.compress(logits, method="top_k", k=self.comp_top_k)
+        p = c.val.astype(np.float64)
+        return int(self.rng.choice(c.idx, p=p / p.sum()))
+
+    def _one_token(self, cache, token: int, pos: int, m: DeviceMetrics):
+        """Feed `token` at `pos`; returns (logits, conf, imp_vec, cache)."""
+        tk = jnp.asarray([[token]], jnp.int32)
+        ps = jnp.asarray([[pos]], jnp.int32)
+        layer_logits, imp_vec, cache = self._step(self.params, cache, tk, ps)
+        layer_logits = np.asarray(layer_logits, np.float32)  # (L, V)
+        nL = layer_logits.shape[0]
+        if self.use_early_exit:
+            exit_layer, _, _ = EE.pick_exit_layer(
+                jnp.asarray(layer_logits)[:, None, :], nL, self.ee)
+            el = int(exit_layer[0])
+            logits = layer_logits[el]
+            frac_saved = (nL - 1 - el) / nL
+        else:
+            logits = layer_logits[-1]
+            frac_saved = 0.0
+        m.layers_saved_frac.append(frac_saved)
+        m.timeline.advance(self.latency.draft_ms(1, 1.0 - frac_saved),
+                           "compute")
+        m.timeline.energy_j += self.latency.energy_j(1, 1.0 - frac_saved)
+        probs = np.exp(logits - logits.max())
+        probs /= probs.sum()
+        conf = float(probs.max())
+        return logits, conf, np.asarray(imp_vec, np.float32), cache
+
+    def _draft_chunk(self, cache, first_token: int, start_pos: int,
+                     m: DeviceMetrics):
+        """Feed `first_token` at `start_pos` and draft gamma tokens.
+
+        Draft token d_j (1-indexed) gets fed at position start_pos + j;
+        its importance accumulates the attention later in-chunk queries
+        (including itself) pay to its key.
+        Returns (tokens [d_1..d_g], logits_list, confs, imp (g,), cache).
+        """
+        tokens, logits_list, confs = [], [], []
+        imp_acc = np.zeros(self.gamma, np.float64)
+        tok, pos = first_token, start_pos
+        for j in range(self.gamma):
+            logits, conf, imp_vec, cache = self._one_token(cache, tok, pos, m)
+            nxt = self._sample(logits)
+            tokens.append(nxt)
+            logits_list.append(logits)
+            confs.append(conf)
+            for jj in range(1, j + 1):   # keys of d_1..d_j are in cache
+                slot = (start_pos + jj) % self.s_max
+                imp_acc[jj - 1] += float(imp_vec[slot])
+            tok, pos = nxt, pos + 1
+        return tokens, logits_list, confs, imp_acc / self.gamma, cache
+
+    # ------------------------------------------------------------------
+    def generate(self, prompt: list[int], max_new: int, cloud=None,
+                 profile_mode: bool = False) -> DeviceMetrics:
+        """Generate up to ``max_new`` tokens after the prompt.
+
+        ``cloud`` implements the CloudClient protocol (serving/synergy.py)
+        or None for edge-centric generation.  profile_mode offloads every
+        chunk and records ChunkRecords for offline profiling (§5).
+        """
+        m = DeviceMetrics()
+        cache = M.init_cache(self.cfg, 1, self.s_max)
+        prompt = [int(t) for t in prompt]
+        T = len(prompt)
+        assert T >= 2, "need at least 2 prompt tokens"
+        max_len = max_new
+        # dedicated offload-decision stream, deterministic per prompt:
+        # ablation variants (PI on/off, EE on/off) then share identical
+        # offload decisions, so quality differences isolate the mechanism
+        # under test (PI is exactness-preserving; only latency may move)
+        rng_off = np.random.default_rng(
+            self.seed * 1000003 + sum(prompt) + 31 * T)
+
+        # Feed prompt[:-1] so the invariant holds with seq = prompt: the
+        # first generated token is itself a draft token (SLM-centric
+        # generation; *every* output token is subject to verification).
+        tk = jnp.asarray([prompt[:-1]], jnp.int32)
+        pos = jnp.asarray([np.arange(T - 1)], jnp.int32)
+        _, cache = self._prefill(self.params, cache, tk, pos)
+        m.timeline.advance(self.latency.draft_ms(T - 1, 1.0), "compute")
+        m.timeline.energy_j += self.latency.energy_j(T - 1, 1.0)
+
+        if cloud is not None:
+            up = 4 * T + 32
+            m.uplink_bytes += up
+            dt = self.link.transfer_ms(up)
+            cloud.prefill(prompt, arrival_ms=m.timeline.t_ms + dt)
+
+        seq = list(prompt)     # invariant: seq[:-1] fed, seq[-1] not fed
+        pi_chunk = None
+
+        while len(seq) - T < max_new:
+            if pi_chunk is not None:
+                tokens, logits_list, confs, imp, cache = pi_chunk
+                pi_chunk = None
+            else:
+                tokens, logits_list, confs, imp, cache = self._draft_chunk(
+                    cache, seq[-1], len(seq) - 1, m)
+            m.n_chunks += 1
+            mean_conf = float(np.mean(confs))
+            mean_imp = float(np.mean(imp))
+
+            do_offload = cloud is not None
+            if do_offload and not profile_mode:
+                do_offload = self.policy.should_offload(
+                    rng_off, mean_conf, mean_imp,
+                    seq_pos=len(seq) - T, max_len=max_len,
+                    seq_exit_frac=(self.ee.seq_exit_frac
+                                   if self.use_early_exit else 0.0),
+                    chunk_index=m.n_chunks - 1)
+
+            if not do_offload:
+                seq.extend(tokens)
+                m.n_local_tokens += len(tokens)
+                continue
+
+            # ---- offload: build + send the verification request --------
+            m.n_offloaded += 1
+            m.n_draft_tokens += len(tokens)  # drafts actually verified
+            dists = [CP.compress(
+                lg, method=("greedy" if self.sampling == "greedy"
+                            else "top_k"), k=self.comp_top_k)
+                for lg in logits_list]
+            payload = CP.chunk_payload_bytes(
+                dists, len(tokens), compressed=self.use_compression,
+                vocab=self.wire_vocab)
+            m.uplink_bytes += payload
+            uplink_ms = self.link.transfer_ms(payload)
+
+            # ---- stall-free parallel inference (during the round trip) --
+            # Position note: before this chunk len(seq) = n; drafting fed
+            # seq[-1]@n-1 and d_1..d_{gamma-1}@n..n+gamma-2.  d_gamma
+            # (position n+gamma-1) is NOT yet in the cache.
+            draft_base = len(seq)          # d_j sits at draft_base + j - 1
+            pi_state = None
+            dgamma_fed = False
+            overlap_t0 = m.timeline.t_ms
+            if self.use_pi and not profile_mode:
+                m.pi_attempts += 1
+                r_star = PI.predict_rejection(np.asarray(confs), self.alpha,
+                                              self.rng)
+                if r_star < self.gamma:
+                    c3 = CP.compress(logits_list[r_star], method="top_k", k=3)
+                    alt = PI.choose_alternative(c3.idx, c3.val,
+                                                tokens[r_star], self.rng)
+                    # d_1..d_{r*} already fed; alt replaces d_{r*+1}
+                    spec = self._draft_chunk(cache, alt,
+                                             draft_base + r_star, m)
+                else:
+                    # predicted full acceptance: SLM predicts the bonus
+                    logits_b, _, _, cache = self._one_token(
+                        cache, tokens[-1], draft_base + self.gamma - 1, m)
+                    dgamma_fed = True
+                    alt = self._sample(logits_b)
+                    spec = self._draft_chunk(cache, alt,
+                                             draft_base + self.gamma, m)
+                pi_state = PI.PIState(r_star=r_star, alt_token=alt,
+                                      tokens=spec)
+            overlap_ms = m.timeline.t_ms - overlap_t0
+
+            # ---- cloud round trip ---------------------------------------
+            result, cloud_ms = cloud.verify(
+                seq=seq, draft=tokens, dists=dists,
+                arrival_ms=overlap_t0 + uplink_ms)
+            m.n_cloud_fed_tokens += cloud.last_fed_tokens
+            down_bytes = 32 + 4 * (len(result.tokens) + 1)
+            m.downlink_bytes += down_bytes
+            rtt_ms = (uplink_ms + cloud_ms
+                      + self.link.transfer_ms(down_bytes))
+
+            # PI compute overlapped with the round trip; only the excess
+            # round-trip time stalls the pipeline (Fig 6).
+            stall_ms = max(rtt_ms - overlap_ms, 0.0)
+            m.timeline.advance(stall_ms, "stall")
+            m.timeline.comm_ms += min(rtt_ms, overlap_ms)  # masked comm
+
+            n_acc = result.n_accepted
+            verified = list(result.tokens)  # accepted prefix + corrected/bonus
+            seq.extend(verified)
+            m.n_cloud_tokens += len(verified)
+            m.n_accepted_tokens += n_acc
+
+            if n_acc >= self.gamma and not dgamma_fed:
+                # full acceptance: d_gamma entered `seq` but was never fed
+                # during drafting — feed it so the cache covers seq[:-1]
+                _, _, _, cache = self._one_token(
+                    cache, tokens[-1], draft_base + self.gamma - 1, m)
+
+            if profile_mode:
+                m.chunk_records.append(ChunkRecord(
+                    mean_conf=mean_conf, mean_imp=mean_imp,
+                    n_accepted=n_acc, gamma=self.gamma))
+
+            if pi_state is not None:
+                adopt, pos_hit = PI.merge(pi_state, n_acc, verified[-1],
+                                          self.gamma)
+                m.pi_position_hits += int(pos_hit)
+                m.pi_adopted += int(adopt)
+                if adopt:
+                    # the speculative chunk is the next draft chunk; the
+                    # cache already covers seq[-1]
+                    pi_chunk = pi_state.tokens
+            # on non-adoption, stale speculative KV beyond len(seq)-1 is
+            # causally masked until overwritten — nothing to roll back.
+
+        m.tokens = seq[T:T + max_new]
+        return m
+
+    # ------------------------------------------------------------------
+    def perplexity(self, tokens: list[int]) -> float:
+        """Prompt perplexity under the SLM (EdgeFM-LLM baseline input-level
+        offload signal)."""
+        tk = jnp.asarray([tokens], jnp.int32)
+        pos = M.default_positions(1, len(tokens))
+        logits, _, _, _ = M.forward(self.cfg, self.params, tk, pos)
+        logp = jax.nn.log_softmax(logits[:, :-1].astype(jnp.float32), -1)
+        nll = -jnp.take_along_axis(logp, tk[:, 1:, None], axis=-1).mean()
+        return float(jnp.exp(nll))

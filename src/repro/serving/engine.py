@@ -1,0 +1,97 @@
+"""Cloud execution engine: slot-based continuous batching on fixed-shape
+jit-compiled steps (the TPU-idiomatic equivalent of vLLM's engine; see
+DESIGN.md §2).
+
+The engine is *mechanism only*: it owns the KV/SSM cache pytree and
+exposes fixed-shape ``feed`` (chunked partial prefill over any slots) and
+``decode`` steps.  All batching *policy* lives in
+``serving/scheduler.py`` (Algorithm 1 of the paper).
+
+Ragged per-slot chunks are padded to the iteration width; padded entries
+carry position -1, which ``cache_write`` drops (never pollutes the
+cache).  Chunk widths are bucketed to powers of two to bound jit
+re-specialization.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.models.steps import make_decode_step, make_verify_step
+
+
+def _bucket(n: int, lo: int = 8) -> int:
+    b = lo
+    while b < n:
+        b *= 2
+    return b
+
+
+class CloudEngine:
+    """Fixed-slot serving engine for one model."""
+
+    def __init__(self, cfg, params, *, max_slots: int = 8, s_max: int = 2048,
+                 window: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.max_slots = max_slots
+        self.s_max = s_max
+        self.window = window
+        self.cache = M.init_cache(cfg, max_slots, s_max)
+        self._verify = jax.jit(make_verify_step(cfg, window=window))
+        self._decode = jax.jit(make_decode_step(cfg, window=window))
+        self.vocab = cfg.vocab
+
+    def reset_slot(self, slot: int):
+        """Invalidate a slot's cache: positions -> -1 (stale K/V at invalid
+        positions is never attended to), SSM/conv states -> 0."""
+
+        def tree_invalidate(c):
+            if not isinstance(c, dict):
+                return c
+            out = {}
+            for k, v in c.items():
+                if isinstance(v, dict):
+                    out[k] = tree_invalidate(v)
+                elif k == "pos":                       # (..., B, S)
+                    out[k] = v.at[..., slot, :].set(-1)
+                elif k == "state":                     # (..., B, H, P, N)
+                    out[k] = v.at[..., slot, :, :, :].set(0)
+                elif k == "conv":                      # (..., B, W-1, C)
+                    out[k] = v.at[..., slot, :, :].set(0)
+                else:                                  # k/v buffers: stale ok
+                    out[k] = v
+            return out
+
+        self.cache = tree_invalidate(self.cache)
+
+    # ------------------------------------------------------------------
+    def feed(self, tokens: np.ndarray, positions: np.ndarray) -> np.ndarray:
+        """Chunked (partial) prefill over all slots.
+
+        tokens, positions: (max_slots, C) int32; positions == -1 marks
+        padding/idle.  Returns logits (max_slots, C, V) as numpy.
+        """
+        C = tokens.shape[1]
+        Cb = _bucket(C)
+        if Cb != C:
+            pad = Cb - C
+            tokens = np.pad(tokens, ((0, 0), (0, pad)))
+            positions = np.pad(positions, ((0, 0), (0, pad)),
+                               constant_values=-1)
+        logits, self.cache = self._verify(
+            self.params, self.cache,
+            jnp.asarray(tokens, jnp.int32), jnp.asarray(positions, jnp.int32))
+        return np.asarray(logits[:, :C], np.float32)
+
+    def decode(self, tokens: np.ndarray, positions: np.ndarray) -> np.ndarray:
+        """One decode step for all slots. tokens/positions: (max_slots, 1).
+
+        Returns last-token logits (max_slots, V)."""
+        logits, self.cache = self._decode(
+            self.params, self.cache,
+            jnp.asarray(tokens, jnp.int32), jnp.asarray(positions, jnp.int32))
+        return np.asarray(logits, np.float32)

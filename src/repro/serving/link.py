@@ -1,0 +1,93 @@
+"""Device<->cloud WAN link and latency/energy models.
+
+The container is CPU-only, so wall-clock numbers for the Jetson/Pixel
+device and the A6000 cloud of the paper are *modeled* with calibrated
+constants (paper §6: SLM TBT tens of ms on Jetson; LLM verification
+~100-400 ms; bandwidths 0.1-100 Mbps).  Transfer *sizes* are computed
+exactly from the real payloads (tokens + compressed distributions), which
+is what the paper's bandwidth study (Fig 13) measures.
+
+Token streams themselves are produced by the real models; only time is
+simulated.  See DESIGN.md §2.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+@dataclass
+class LinkModel:
+    bandwidth_mbps: float = 10.0
+    rtt_ms: float = 20.0
+
+    def transfer_ms(self, nbytes: int) -> float:
+        bits = nbytes * 8.0
+        return self.rtt_ms / 2.0 + bits / (self.bandwidth_mbps * 1e6) * 1e3
+
+
+@dataclass
+class DeviceLatencyModel:
+    """Per-token SLM compute on the device (Jetson AGX Orin class)."""
+    ms_per_token: float = 30.0          # full-depth forward
+    ms_fixed: float = 2.0               # dispatch overhead per forward
+    energy_j_per_token: float = 1.86    # paper Table 5, edge-centric
+    scheduling_ms_per_token: float = 0.4  # paper Table 5: <0.5ms
+
+    def draft_ms(self, n_tokens: int, layer_frac: float = 1.0) -> float:
+        """layer_frac < 1 models layer-wise early exit savings."""
+        return self.ms_fixed + n_tokens * self.ms_per_token * layer_frac
+
+    def energy_j(self, n_tokens: int, layer_frac: float = 1.0) -> float:
+        return n_tokens * self.energy_j_per_token * layer_frac
+
+
+@dataclass
+class CloudLatencyModel:
+    """Cloud engine iteration cost (A6000-class, continuous batching).
+
+    ms_base calibrated to a 13B bf16 verifier on A6000: the decode/verify
+    iteration floor is the weight stream (~26 GB / ~650 GB/s ~ 40 ms),
+    amortized across the batched slots of one iteration."""
+    ms_base: float = 40.0               # per-iteration fixed cost
+    ms_per_token: float = 0.12          # per (token x slot) in the batch
+    ms_scheduler: float = 0.5           # verification-aware scheduling overhead
+    prefill_ms_per_token: float = 0.25
+
+    def iteration_ms(self, total_tokens: int) -> float:
+        return self.ms_base + self.ms_scheduler + total_tokens * self.ms_per_token
+
+    def prefill_ms(self, total_tokens: int) -> float:
+        return self.ms_base + total_tokens * self.prefill_ms_per_token
+
+
+@dataclass
+class CostModel:
+    """Estimated cloud serving cost (paper §6.1): c = (1/Pf) * T * W.
+
+    Pf = packing factor (Table 3), T = average TBT, W = fraction of tokens
+    that hit the cloud."""
+    packing_factor: float = 13.0   # Llama-7B-class verifier
+
+    def cost(self, avg_tbt_ms: float, cloud_token_frac: float) -> float:
+        return (1.0 / self.packing_factor) * avg_tbt_ms * cloud_token_frac
+
+
+@dataclass
+class Timeline:
+    """Accumulates simulated wall-clock per request stream."""
+    t_ms: float = 0.0
+    stall_ms: float = 0.0
+    compute_ms: float = 0.0
+    comm_ms: float = 0.0
+    energy_j: float = 0.0
+    events: list = field(default_factory=list)
+
+    def advance(self, dt: float, kind: str):
+        self.t_ms += dt
+        if kind == "stall":
+            self.stall_ms += dt
+        elif kind == "compute":
+            self.compute_ms += dt
+        elif kind == "comm":
+            self.comm_ms += dt
+        self.events.append((kind, dt))

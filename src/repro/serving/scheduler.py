@@ -1,0 +1,215 @@
+"""Verification-aware scheduler (Synera §4.5, Algorithm 1).
+
+Batching policy over the CloudEngine:
+
+* Prefill requests are prioritized: while any are queued, an iteration
+  executes a prefill batch (lines 5-11 of Algorithm 1).
+* Otherwise, queued verification requests are batched.  Each request is
+  a *partial prefill*: device-accepted-but-uncached tokens followed by
+  pending-verify draft tokens, executed over the slot's cached prefix.
+  Requests are segmented into fixed-size chunks (Sarathi-style, default
+  32) so iterations stay uniform (lines 12-21).
+* When a request's last chunk completes, the draft tokens are verified
+  ("draft & verify") from the collected logits rows and the result is
+  emitted.
+
+The scheduler also supports plain decode streams (the cloud-centric
+baseline) through ``decode_iteration``.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core import verifier as V
+from repro.serving.engine import CloudEngine
+from repro.serving.link import CloudLatencyModel
+
+
+@dataclass
+class PrefillRequest:
+    req_id: int
+    tokens: np.ndarray            # (T,) prompt
+    slot: int = -1
+
+
+@dataclass
+class VerifyRequest:
+    req_id: int
+    slot: int
+    uncached: np.ndarray          # device-accepted tokens not yet cloud-cached
+    draft: np.ndarray             # (gamma,) pending-verify tokens
+    q_sparse: list                # compressed SLM dists per draft position
+    sampling: str = "greedy"
+    start_pos: int = 0            # absolute position of uncached[0]
+    # internal
+    fed: int = 0
+    rows: list = field(default_factory=list)  # (abs_pos, logits row)
+
+
+@dataclass
+class SchedulerEvent:
+    kind: str                     # "prefill_done" | "verify_done"
+    req_id: int
+    slot: int
+    result: object = None         # VerifyResult for verify_done
+    last_logits: np.ndarray = None
+
+
+class VerificationAwareScheduler:
+    def __init__(self, engine: CloudEngine, *, chunk: int = 32,
+                 latency: CloudLatencyModel | None = None,
+                 rng: np.random.Generator | None = None):
+        self.engine = engine
+        self.chunk = chunk
+        self.latency = latency or CloudLatencyModel()
+        self.rng = rng or np.random.default_rng(0)
+        self.prefill_q: deque[PrefillRequest] = deque()
+        self.verify_q: deque[VerifyRequest] = deque()
+        self.active_verify: list[VerifyRequest] = []
+        self.free_slots = list(range(engine.max_slots))
+        self.cloud_len = np.zeros(engine.max_slots, np.int64)
+        self.last_row: dict[int, np.ndarray] = {}  # slot -> last fed logits row
+        self.iterations = 0
+        self.sim_ms = 0.0
+
+    # ------------------------------------------------------------------
+    def submit_prefill(self, req: PrefillRequest):
+        self.prefill_q.append(req)
+
+    def submit_verify(self, req: VerifyRequest):
+        assert self.chunk >= len(req.draft) + 1, \
+            "Sarathi chunk must cover a draft chunk (+1) so rejected-draft " \
+            "cache entries are overwritten before any query can attend to them"
+        req.start_pos = int(self.cloud_len[req.slot])
+        self.verify_q.append(req)
+
+    def release_slot(self, slot: int):
+        self.engine.reset_slot(slot)
+        self.cloud_len[slot] = 0
+        self.free_slots.append(slot)
+
+    def has_work(self) -> bool:
+        return bool(self.prefill_q or self.verify_q or self.active_verify)
+
+    # ------------------------------------------------------------------
+    def run_iteration(self) -> list[SchedulerEvent]:
+        """One scheduling iteration (one trip through Algorithm 1's loop).
+        Returns completion events; advances the simulated clock."""
+        self.iterations += 1
+        if self.prefill_q:
+            return self._prefill_iteration()
+        if self.verify_q or self.active_verify:
+            return self._verify_iteration()
+        return []
+
+    # -- prefill (lines 5-11) ------------------------------------------
+    def _prefill_iteration(self) -> list[SchedulerEvent]:
+        batch: list[PrefillRequest] = []
+        while self.prefill_q and self.free_slots:
+            req = self.prefill_q.popleft()
+            req.slot = self.free_slots.pop()
+            batch.append(req)
+        if not batch:
+            return []  # wait for a free slot
+
+        B = self.engine.max_slots
+        C = max(len(r.tokens) for r in batch)
+        tokens = np.zeros((B, C), np.int32)
+        positions = np.full((B, C), -1, np.int32)
+        for r in batch:
+            T = len(r.tokens)
+            tokens[r.slot, :T] = r.tokens
+            positions[r.slot, :T] = np.arange(T)
+        logits = self.engine.feed(tokens, positions)
+
+        events = []
+        total = sum(len(r.tokens) for r in batch)
+        self.sim_ms += self.latency.prefill_ms(total)
+        for r in batch:
+            T = len(r.tokens)
+            self.cloud_len[r.slot] = T
+            self.last_row[r.slot] = logits[r.slot, T - 1]
+            events.append(SchedulerEvent(
+                "prefill_done", r.req_id, r.slot,
+                last_logits=logits[r.slot, T - 1]))
+        return events
+
+    # -- verification partial prefill (lines 12-21) ---------------------
+    def _verify_iteration(self) -> list[SchedulerEvent]:
+        while self.verify_q:
+            self.active_verify.append(self.verify_q.popleft())
+
+        B = self.engine.max_slots
+        C = self.chunk
+        tokens = np.zeros((B, C), np.int32)
+        positions = np.full((B, C), -1, np.int32)
+        feeding: list[tuple[VerifyRequest, int, int]] = []
+        used_slots = set()
+        for req in self.active_verify:
+            if req.slot in used_slots:
+                continue  # one chunk per slot per iteration
+            seq = np.concatenate([req.uncached, req.draft]).astype(np.int32)
+            n = min(C, len(seq) - req.fed)
+            if n <= 0:
+                continue
+            tokens[req.slot, :n] = seq[req.fed:req.fed + n]
+            positions[req.slot, :n] = (req.start_pos + req.fed
+                                       + np.arange(n))
+            feeding.append((req, req.fed, n))
+            used_slots.add(req.slot)
+
+        if not feeding:
+            return []
+        logits = self.engine.feed(tokens, positions)
+        total = sum(n for _, _, n in feeding)
+        self.sim_ms += self.latency.iteration_ms(total)
+
+        events = []
+        for req, fed0, n in feeding:
+            gamma = len(req.draft)
+            seq_len = len(req.uncached) + gamma
+            keep_from = seq_len - gamma - 1  # rows for draft verification
+            for i in range(n):
+                idx = fed0 + i
+                if idx >= keep_from:
+                    req.rows.append((req.start_pos + idx, logits[req.slot, i]))
+            req.fed = fed0 + n
+            self.cloud_len[req.slot] = req.start_pos + req.fed
+            if req.fed >= seq_len:
+                events.append(self._finish_verify(req))
+        self.active_verify = [r for r in self.active_verify
+                              if r.fed < len(r.uncached) + len(r.draft)]
+        return events
+
+    def _finish_verify(self, req: VerifyRequest) -> SchedulerEvent:
+        gamma = len(req.draft)
+        # rows for positions draft_start-1 .. draft_start+gamma-1
+        need = gamma + 1
+        rows = sorted(req.rows, key=lambda x: x[0])[-need:]
+        if len(rows) < need:
+            # first verification right after prefill with no uncached
+            # tokens: the row preceding the draft is the prefill's last row
+            rows = [(-1, self.last_row[req.slot])] + rows
+        p_logits = np.stack([r[1] for r in rows])  # (gamma+1, V)
+        if req.sampling == "greedy":
+            res = V.verify_greedy(req.draft, p_logits)
+        else:
+            res = V.verify_sample(req.draft, p_logits, req.q_sparse, self.rng)
+        # roll the cloud cache frontier back to the accepted prefix: the
+        # rejected draft tokens were written to cache but their positions
+        # will be overwritten by the corrected continuation (cache_write
+        # is idempotent per position).
+        accepted_abs = (req.start_pos + len(req.uncached) + res.n_accepted)
+        self.cloud_len[req.slot] = accepted_abs
+        return SchedulerEvent("verify_done", req.req_id, req.slot, result=res)
+
+    # -- plain decode (cloud-centric baseline) ---------------------------
+    def decode_iteration(self, tokens: np.ndarray, positions: np.ndarray):
+        """tokens/positions: (max_slots, 1); position -1 = idle slot."""
+        logits = self.engine.decode(tokens, positions)
+        active = int((positions >= 0).sum())
+        self.sim_ms += self.latency.iteration_ms(active)
+        return logits

@@ -1,0 +1,226 @@
+"""End-to-end device-cloud orchestration (Fig 8) and the paper's four
+baselines (§6.1): Edge-centric, Cloud-centric, Hybrid [9], EdgeFM-LLM.
+
+``CloudClient`` is a synchronous facade that a DeviceRuntime calls; it
+submits requests to the verification-aware scheduler and spins the
+scheduler's iteration loop until its request completes, returning both
+the verification result and the modeled cloud latency (queueing +
+compute).  Token streams are real model outputs; only wall-clock is
+modeled (see serving/link.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.verifier import VerifyResult
+from repro.serving.device import DeviceMetrics, DeviceRuntime
+from repro.serving.engine import CloudEngine
+from repro.serving.link import CloudLatencyModel, CostModel, LinkModel
+from repro.serving.scheduler import (PrefillRequest, VerificationAwareScheduler,
+                                     VerifyRequest)
+
+
+class CloudClient:
+    """One device stream's view of the cloud runtime."""
+
+    def __init__(self, scheduler: VerificationAwareScheduler,
+                 sampling: str = "greedy"):
+        self.sched = scheduler
+        self.sampling = sampling
+        self.slot = None
+        self._req = 0
+        self.last_fed_tokens = 0
+        self.total_fed_tokens = 0   # generation-phase feeds only
+        self.prefill_tokens = 0
+
+    def _next_req(self) -> int:
+        self._req += 1
+        return self._req
+
+    def _run_until(self, req_id: int, kind: str):
+        while True:
+            for ev in self.sched.run_iteration():
+                if ev.req_id == req_id and ev.kind == kind:
+                    return ev
+            if not self.sched.has_work():
+                raise RuntimeError("scheduler idle before completion")
+
+    # ------------------------------------------------------------------
+    def prefill(self, prompt: list[int], arrival_ms: float = 0.0):
+        rid = self._next_req()
+        t0 = self.sched.sim_ms
+        self.sched.submit_prefill(PrefillRequest(rid, np.asarray(prompt)))
+        ev = self._run_until(rid, "prefill_done")
+        self.slot = ev.slot
+        # prompt prefill tracked separately from generation-phase feeds
+        self.prefill_tokens = len(prompt)
+        return self.sched.sim_ms - t0
+
+    def frontier(self) -> int:
+        return int(self.sched.cloud_len[self.slot])
+
+    def verify(self, seq: list[int], draft: list[int], dists,
+               arrival_ms: float = 0.0) -> tuple[VerifyResult, float]:
+        """seq: the device's accepted stream (prompt + output).  Tokens
+        beyond the cloud's cached frontier are the uncached
+        device-accepted tokens of the partial prefill (§3.4)."""
+        uncached = np.asarray(seq[self.frontier():], np.int64)
+        self.last_fed_tokens = len(uncached) + len(draft)
+        self.total_fed_tokens += self.last_fed_tokens
+        rid = self._next_req()
+        t0 = self.sched.sim_ms
+        self.sched.submit_verify(VerifyRequest(
+            rid, self.slot, uncached=uncached,
+            draft=np.asarray(draft, np.int64), q_sparse=[(d.idx, d.val)
+                                                         for d in dists],
+            sampling=self.sampling))
+        ev = self._run_until(rid, "verify_done")
+        return ev.result, self.sched.sim_ms - t0
+
+    def release(self):
+        if self.slot is not None:
+            self.sched.release_slot(self.slot)
+            self.slot = None
+
+
+# ---------------------------------------------------------------------------
+# End-to-end runs
+# ---------------------------------------------------------------------------
+
+@dataclass
+class RunResult:
+    outputs: list = field(default_factory=list)     # list[list[int]]
+    metrics: list = field(default_factory=list)     # list[DeviceMetrics]
+    tbt_ms: float = 0.0
+    cloud_token_frac: float = 0.0
+    cloud_fed_frac: float = 0.0
+    cost: float = 0.0
+    extras: dict = field(default_factory=dict)
+
+    def summarize(self, cost_model: CostModel):
+        tbts = [m.tbt_ms for m in self.metrics]
+        self.tbt_ms = float(np.mean(tbts)) if tbts else 0.0
+        fracs = [m.cloud_token_frac for m in self.metrics]
+        self.cloud_token_frac = float(np.mean(fracs)) if fracs else 0.0
+        fed = [m.n_cloud_fed_tokens / max(len(m.tokens), 1)
+               for m in self.metrics]
+        self.cloud_fed_frac = float(np.mean(fed)) if fed else 0.0
+        # paper §6.1: c = (1/Pf) x T x W with W = fraction of tokens
+        # whose generation involved the cloud (verified tokens); the
+        # generation-phase fed-token count is kept as a diagnostic
+        self.cost = cost_model.cost(self.tbt_ms, self.cloud_token_frac)
+        return self
+
+
+def run_synera(device: DeviceRuntime, engine: CloudEngine,
+               prompts: list[list[int]], max_new: int, *,
+               sampling: str = "greedy",
+               cost_model: CostModel | None = None,
+               profile_mode: bool = False,
+               chunk: int = 32) -> RunResult:
+    res = RunResult()
+    sched = VerificationAwareScheduler(engine, chunk=chunk)
+    for prompt in prompts:
+        client = CloudClient(sched, sampling=sampling)
+        m = device.generate(prompt, max_new, cloud=client,
+                            profile_mode=profile_mode)
+        m.n_cloud_fed_tokens = client.total_fed_tokens
+        res.outputs.append(m.tokens)
+        res.metrics.append(m)
+        client.release()
+    return res.summarize(cost_model or CostModel())
+
+
+def run_edge_centric(device: DeviceRuntime, prompts, max_new,
+                     cost_model=None) -> RunResult:
+    res = RunResult()
+    for prompt in prompts:
+        m = device.generate(prompt, max_new, cloud=None)
+        res.outputs.append(m.tokens)
+        res.metrics.append(m)
+    return res.summarize(cost_model or CostModel())
+
+
+def run_cloud_centric(engine: CloudEngine, prompts, max_new, *,
+                      link: LinkModel | None = None,
+                      latency: CloudLatencyModel | None = None,
+                      cost_model=None, sampling: str = "greedy") -> RunResult:
+    """All queries offloaded; the cloud decodes every token (continuous
+    batching decode iterations).  TBT includes the per-token downlink."""
+    link = link or LinkModel()
+    res = RunResult()
+    sched = VerificationAwareScheduler(engine,
+                                       latency=latency or CloudLatencyModel())
+    for prompt in prompts:
+        client = CloudClient(sched, sampling=sampling)
+        t0 = sched.sim_ms
+        client.prefill(prompt)
+        slot = client.slot
+        out = []
+        last = int(np.argmax(sched.last_row[slot]))
+        out.append(last)
+        pos = len(prompt)
+        B = engine.max_slots
+        while len(out) < max_new:
+            tokens = np.zeros((B, 1), np.int32)
+            positions = np.full((B, 1), -1, np.int32)
+            tokens[slot, 0] = last
+            positions[slot, 0] = pos - 1 + 1  # feed `last` at its position
+            positions[slot, 0] = len(prompt) + len(out) - 1
+            logits = sched.decode_iteration(tokens, positions)
+            last = int(np.argmax(logits[slot]))
+            out.append(last)
+            pos += 1
+        m = DeviceMetrics()
+        m.tokens = out[:max_new]
+        m.n_cloud_tokens = len(m.tokens)
+        m.n_cloud_fed_tokens = len(out)
+        # time: cloud iterations + per-token downlink
+        cloud_ms = sched.sim_ms - t0
+        comm_ms = (link.transfer_ms(4 * len(prompt) + 32)
+                   + len(out) * link.transfer_ms(36))
+        m.timeline.advance(cloud_ms, "compute")
+        m.timeline.advance(comm_ms, "comm")
+        res.outputs.append(m.tokens)
+        res.metrics.append(m)
+        client.release()
+    return res.summarize(cost_model or CostModel())
+
+
+def run_hybrid(device: DeviceRuntime, engine: CloudEngine, prompts, max_new,
+               *, cost_model=None, chunk: int = 32) -> RunResult:
+    """Hybrid [9]: SLM-LLM token-level offloading by *confidence only*
+    (no importance, no PI, no early exit)."""
+    from repro.core.offload import OffloadPolicy
+    dev = DeviceRuntime(
+        device.cfg, device.params, s_max=device.s_max, gamma=device.gamma,
+        policy=OffloadPolicy(c_th=device.policy.c_th, mode="conf"),
+        sampling=device.sampling, latency=device.latency, link=device.link,
+        use_early_exit=False, use_pi=False, alpha=device.alpha,
+        wire_vocab=device.wire_vocab)
+    return run_synera(dev, engine, prompts, max_new, cost_model=cost_model,
+                      chunk=chunk)
+
+
+def run_edgefm(device: DeviceRuntime, engine: CloudEngine, prompts, max_new,
+               *, ppl_threshold: float = 0.0, cost_model=None,
+               link: LinkModel | None = None) -> RunResult:
+    """EdgeFM [38] adapted to LLMs (§6.1): *input-level* offloading —
+    high-perplexity prompts go entirely to the cloud, the rest stay
+    entirely on the device."""
+    ppls = [device.perplexity(p) for p in prompts]
+    thr = ppl_threshold or float(np.median(ppls))
+    res = RunResult()
+    sched = VerificationAwareScheduler(engine)
+    for prompt, ppl in zip(prompts, ppls):
+        if ppl > thr:
+            r = run_cloud_centric(engine, [prompt], max_new, link=link)
+            res.outputs.append(r.outputs[0])
+            res.metrics.append(r.metrics[0])
+        else:
+            m = device.generate(prompt, max_new, cloud=None)
+            res.outputs.append(m.tokens)
+            res.metrics.append(m)
+    return res.summarize(cost_model or CostModel())

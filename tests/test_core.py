@@ -1,0 +1,281 @@
+"""Unit + hypothesis property tests for Synera's core modules."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import compression as CP
+from repro.core import early_exit as EE
+from repro.core import parallel as PI
+from repro.core import verifier as V
+from repro.core.offload import (OffloadPolicy, importance_from_percentile,
+                                p_conf, p_imp)
+from repro.core.profiling import ChunkRecord, SyneraProfile, fit_profile
+
+
+# ---------------------------------------------------------------------------
+# Offload dispatch probabilities (the paper's equations, Fig 9)
+# ---------------------------------------------------------------------------
+
+class TestDispatchProbabilities:
+    def test_p_conf_below_threshold_always_offloads(self):
+        assert float(p_conf(0.3, c_th=0.7)) == 1.0
+        assert float(p_conf(0.7, c_th=0.7)) == 1.0
+
+    def test_p_conf_monotone_decreasing_above_threshold(self):
+        cs = np.linspace(0.71, 1.0, 50)
+        ps = np.array([float(p_conf(c, 0.7)) for c in cs])
+        assert (np.diff(ps) <= 1e-9).all()
+        assert ps[-1] < 0.01  # fully confident -> essentially never offload
+
+    @given(st.floats(0.0, 1.0), st.floats(0.05, 0.95))
+    @settings(max_examples=50, deadline=None)
+    def test_p_conf_is_probability(self, c, c_th):
+        p = float(p_conf(c, c_th))
+        assert 0.0 <= p <= 1.0
+
+    def test_p_imp_three_tiers(self):
+        i_th = 0.6
+        assert float(p_imp(0.1, i_th)) == 0.0         # <= i_th/2: local
+        assert float(p_imp(0.95, i_th)) == 1.0        # > i_th: offload
+        mid = float(p_imp(0.45, i_th))
+        assert 0.0 < mid < 1.0                        # sigmoid tier
+
+    @given(st.floats(0.0, 2.0), st.floats(0.05, 1.5))
+    @settings(max_examples=50, deadline=None)
+    def test_p_imp_is_probability_and_monotone(self, i, i_th):
+        p = float(p_imp(i, i_th))
+        assert 0.0 <= p <= 1.0
+        assert float(p_imp(i + 0.01, i_th)) >= p - 1e-6
+
+    def test_budget_percentile_mapping(self):
+        samples = np.random.default_rng(0).exponential(size=2000)
+        i20 = importance_from_percentile(samples, 0.2)
+        i80 = importance_from_percentile(samples, 0.8)
+        assert i20 > i80  # larger budget -> lower cutoff
+        frac = (samples > i20).mean()
+        assert abs(frac - 0.2) < 0.03
+
+    def test_policy_modes(self):
+        rng = np.random.default_rng(0)
+        pol_all = OffloadPolicy(mode="all")
+        pol_none = OffloadPolicy(mode="none")
+        assert pol_all.should_offload(rng, 0.99, 0.0)
+        assert not pol_none.should_offload(rng, 0.0, 9.9)
+
+    def test_sequence_wise_exit_blocks_offload(self):
+        rng = np.random.default_rng(0)
+        pol = OffloadPolicy(mode="all")
+        assert not pol.should_offload(rng, 0.0, 9.9, seq_pos=95, max_len=100,
+                                      seq_exit_frac=0.8)
+
+
+# ---------------------------------------------------------------------------
+# Verifier (draft & verify)
+# ---------------------------------------------------------------------------
+
+class TestVerifier:
+    def test_greedy_accept_all(self):
+        V_ = 16
+        draft = np.array([3, 5, 7])
+        logits = np.full((4, V_), -10.0)
+        for t, tok in enumerate([3, 5, 7, 9]):
+            logits[t, tok] = 10.0
+        res = V.verify_greedy(draft, logits)
+        assert res.n_accepted == 3 and res.bonus == 9
+        assert res.tokens == [3, 5, 7, 9]
+
+    def test_greedy_reject_middle(self):
+        V_ = 16
+        draft = np.array([3, 5, 7])
+        logits = np.full((4, V_), -10.0)
+        for t, tok in enumerate([3, 6, 7, 9]):
+            logits[t, tok] = 10.0
+        res = V.verify_greedy(draft, logits)
+        assert res.n_accepted == 1
+        assert res.corrected == 6
+        assert res.tokens == [3, 6]
+
+    def test_greedy_batched_matches_scalar(self):
+        rng = np.random.default_rng(0)
+        B, gamma, V_ = 8, 4, 32
+        draft = rng.integers(0, V_, (B, gamma))
+        logits = rng.normal(size=(B, gamma + 1, V_)).astype(np.float32)
+        n, c, b = V.verify_greedy_batched(jnp.asarray(draft),
+                                          jnp.asarray(logits))
+        for i in range(B):
+            res = V.verify_greedy(draft[i], logits[i])
+            assert int(n[i]) == res.n_accepted
+            if res.n_accepted < gamma:
+                assert int(c[i]) == res.corrected
+            else:
+                assert int(b[i]) == res.bonus
+
+    def test_alpha_expected_roundtrip(self):
+        for alpha in [0.1, 0.5, 0.9, 0.99]:
+            e = V.expected_accepted(alpha, 4)
+            a2 = V.alpha_from_expected(e, 4)
+            assert abs(a2 - alpha) < 1e-4
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(0, 2 ** 31 - 1))
+    def test_sample_verify_preserves_target_distribution(self, seed):
+        """Leviathan's guarantee: the emitted token at the first position
+        is distributed exactly as the target p — regardless of q."""
+        rng = np.random.default_rng(seed)
+        V_ = 6
+        p_logits = rng.normal(size=(2, V_)) * 2
+        q_logits = rng.normal(size=(V_,)) * 2
+        qp = np.exp(q_logits - q_logits.max())
+        qp /= qp.sum()
+        idx = np.arange(V_, dtype=np.int32)
+        # empirical distribution of the first emitted token
+        counts = np.zeros(V_)
+        n_trials = 4000
+        rr = np.random.default_rng(seed + 1)
+        for _ in range(n_trials):
+            draft = np.array([rr.choice(V_, p=qp)])
+            res = V.verify_sample(draft, p_logits,
+                                  [(idx, qp.astype(np.float16))], rr)
+            counts[res.tokens[0]] += 1
+        emp = counts / n_trials
+        target = np.exp(p_logits[0] - p_logits[0].max())
+        target /= target.sum()
+        # chi-square-ish tolerance
+        assert np.abs(emp - target).max() < 0.05
+
+
+# ---------------------------------------------------------------------------
+# Compression
+# ---------------------------------------------------------------------------
+
+class TestCompression:
+    def test_greedy_lossless(self):
+        rng = np.random.default_rng(0)
+        logits = rng.normal(size=32000)
+        c = CP.compress(logits, method="greedy")
+        assert c.idx[0] == np.argmax(logits)
+
+    def test_topk_support_and_ratio(self):
+        rng = np.random.default_rng(1)
+        logits = rng.normal(size=32000)
+        c = CP.compress(logits, method="top_k", k=8)
+        assert len(c.idx) == 8
+        ratio = CP.compression_ratio([c], 32000)
+        assert ratio > 0.995  # paper: >99.5% reduction
+
+    def test_decompress_normalized(self):
+        rng = np.random.default_rng(2)
+        c = CP.compress(rng.normal(size=1000), method="top_p", top_p=0.9)
+        d = CP.decompress(c, 1000)
+        assert abs(d.sum() - 1.0) < 1e-6
+        assert (d >= 0).all()
+
+    @given(st.integers(1, 64))
+    @settings(max_examples=20, deadline=None)
+    def test_topk_keeps_largest(self, k):
+        rng = np.random.default_rng(k)
+        logits = rng.normal(size=256)
+        c = CP.compress(logits, method="top_k", k=k)
+        top = np.sort(np.argpartition(logits, -k)[-k:])
+        assert set(c.idx.tolist()) == set(top.tolist())
+
+
+# ---------------------------------------------------------------------------
+# Early exit
+# ---------------------------------------------------------------------------
+
+class TestEarlyExit:
+    def test_exit_only_in_last_quarter(self):
+        L, B, V_ = 8, 2, 16
+        logits = np.zeros((L, B, V_), np.float32)
+        logits[0, :, 3] = 50.0  # extremely confident at layer 0
+        ee = EE.EarlyExitConfig(threshold=0.5, eligible_frac=0.25)
+        exit_layer, _, _ = EE.pick_exit_layer(jnp.asarray(logits), L, ee)
+        assert (np.asarray(exit_layer) >= int(np.ceil(0.75 * L)) - 1).all()
+
+    def test_confident_layer_exits_early(self):
+        L, B, V_ = 8, 1, 16
+        logits = np.zeros((L, B, V_), np.float32)
+        logits[6, :, 3] = 50.0
+        logits[7, :, 5] = 50.0
+        ee = EE.EarlyExitConfig(threshold=0.5)
+        exit_layer, exit_logits, _ = EE.pick_exit_layer(jnp.asarray(logits),
+                                                        L, ee)
+        assert int(exit_layer[0]) == 6
+        assert int(jnp.argmax(exit_logits[0])) == 3
+
+    def test_no_exit_uses_last_layer(self):
+        L, B, V_ = 8, 1, 16
+        logits = np.zeros((L, B, V_), np.float32)  # uniform: margin 0
+        ee = EE.EarlyExitConfig(threshold=0.5)
+        exit_layer, _, _ = EE.pick_exit_layer(jnp.asarray(logits), L, ee)
+        assert int(exit_layer[0]) == L - 1
+
+
+# ---------------------------------------------------------------------------
+# Parallel inference
+# ---------------------------------------------------------------------------
+
+class TestParallelInference:
+    @given(st.lists(st.floats(0.01, 0.99), min_size=2, max_size=8),
+           st.floats(0.05, 0.95))
+    @settings(max_examples=50, deadline=None)
+    def test_rejection_distribution_normalized(self, confs, alpha):
+        d = PI.rejection_distribution(np.array(confs), alpha)
+        assert abs(d.sum() - 1.0) < 1e-9
+        assert (d >= 0).all()
+        assert len(d) == len(confs) + 1
+
+    def test_high_confidence_predicts_full_accept(self):
+        confs = np.full(4, 0.99)
+        d = PI.rejection_distribution(confs, alpha=0.95)
+        assert d[-1] > 0.9
+
+    def test_low_confidence_predicts_early_reject(self):
+        confs = np.full(4, 0.02)
+        d = PI.rejection_distribution(confs, alpha=0.3)
+        assert d[0] == d.max()
+
+    def test_choose_alternative_excludes_draft(self):
+        rng = np.random.default_rng(0)
+        idx = np.array([5, 9, 2]); val = np.array([0.5, 0.3, 0.2])
+        for _ in range(20):
+            alt = PI.choose_alternative(idx, val, draft_token=9, rng=rng)
+            assert alt in (5, 2)
+
+    def test_merge_requires_position_and_token(self):
+        pi = PI.PIState(r_star=2, alt_token=7)
+        adopt, hit = PI.merge(pi, 2, 7, gamma=4)
+        assert adopt and hit
+        adopt, hit = PI.merge(pi, 2, 8, gamma=4)
+        assert (not adopt) and hit
+        adopt, hit = PI.merge(pi, 3, 7, gamma=4)
+        assert (not adopt) and (not hit)
+
+
+# ---------------------------------------------------------------------------
+# Profiling
+# ---------------------------------------------------------------------------
+
+class TestProfiling:
+    def test_fit_profile(self, tmp_path):
+        rng = np.random.default_rng(0)
+        recs = []
+        for _ in range(200):
+            conf = rng.uniform(0.1, 1.0)
+            acc = 4 if conf > 0.75 else rng.integers(0, 4)
+            recs.append(ChunkRecord(mean_conf=conf,
+                                    mean_imp=rng.exponential(),
+                                    n_accepted=int(acc), gamma=4))
+        prof = fit_profile(recs)
+        assert 0.7 < prof.c_th < 1.0
+        assert 0.0 < prof.alpha < 1.0
+        i_small = prof.i_th_for_budget(0.1)
+        i_big = prof.i_th_for_budget(0.9)
+        assert i_small > i_big
+        p = tmp_path / "prof.json"
+        prof.save(str(p))
+        prof2 = SyneraProfile.load(str(p))
+        assert abs(prof2.alpha - prof.alpha) < 1e-9

@@ -1,0 +1,134 @@
+"""Per-kernel correctness: sweep shapes/dtypes and assert_allclose
+against the pure-jnp ref.py oracle (kernels run in interpret mode on
+CPU; TPU is the compile target)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.attn_importance.attn_importance import attn_with_importance
+from repro.kernels.attn_importance.ref import attn_with_importance_ref
+from repro.kernels.decode_gqa.decode_gqa import decode_attention
+from repro.kernels.decode_gqa.ref import decode_attention_ref
+from repro.kernels.partial_prefill.partial_prefill import (
+    partial_prefill_attention)
+from repro.kernels.partial_prefill.ref import partial_prefill_ref
+from repro.kernels.ssd_scan.ssd_scan import ssd_scan
+from repro.kernels.ssd_scan.ref import ssd_scan_ref, ssd_sequential_ref
+
+TOL = {jnp.float32: dict(atol=2e-5, rtol=2e-5),
+       jnp.bfloat16: dict(atol=5e-2, rtol=5e-2)}
+
+
+@pytest.mark.parametrize("B,T,S,nh,nkv,hd,causal", [
+    (2, 64, 64, 4, 2, 32, True),
+    (1, 100, 100, 8, 8, 64, True),      # non-divisible T (padding)
+    (2, 32, 32, 4, 4, 16, False),
+    (1, 16, 16, 8, 1, 32, True),        # MQA
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_attn_importance(B, T, S, nh, nkv, hd, causal, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, T, nh, hd), dtype)
+    k = jax.random.normal(ks[1], (B, S, nkv, hd), dtype)
+    v = jax.random.normal(ks[2], (B, S, nkv, hd), dtype)
+    o1, i1 = attn_with_importance(q, k, v, causal=causal, block_q=32)
+    o2, i2 = attn_with_importance_ref(q, k, v, causal=causal)
+    tol = TOL[dtype]
+    np.testing.assert_allclose(np.asarray(o1, np.float32),
+                               np.asarray(o2, np.float32), **tol)
+    np.testing.assert_allclose(np.asarray(i1), np.asarray(i2), atol=1e-3)
+    # importance column sums over a causal matrix sum to ~Tq per head
+    np.testing.assert_allclose(np.asarray(i1.sum(-1)),
+                               np.full((B, nh), float(T)), rtol=1e-3)
+
+
+def _cache_positions(rng, B, S, C):
+    qp = np.zeros((B, C), np.int32)
+    kp = np.full((B, S), -1, np.int32)
+    for b in range(B):
+        L = int(rng.integers(C + 1, S - C))
+        kp[b, :L] = np.arange(L)
+        nq = int(rng.integers(1, C + 1))
+        qp[b, :nq] = L + np.arange(nq)
+        qp[b, nq:] = -1
+        kp[b, L:L + nq] = L + np.arange(nq)  # write-then-attend semantics
+    return jnp.asarray(qp), jnp.asarray(kp)
+
+
+@pytest.mark.parametrize("B,C,S,nh,nkv,hd,window", [
+    (2, 8, 128, 4, 2, 32, 0),
+    (1, 32, 100, 8, 8, 64, 0),
+    (2, 4, 256, 4, 1, 16, 64),
+    (3, 16, 96, 6, 3, 32, 0),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_partial_prefill(B, C, S, nh, nkv, hd, window, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (B, C, nh, hd), dtype)
+    k = jax.random.normal(ks[1], (B, S, nkv, hd), dtype)
+    v = jax.random.normal(ks[2], (B, S, nkv, hd), dtype)
+    qp, kp = _cache_positions(np.random.default_rng(0), B, S, C)
+    o1 = partial_prefill_attention(q, k, v, qp, kp, window=window,
+                                   block_kv=64)
+    o2 = partial_prefill_ref(q, k, v, qp, kp, window=window)
+    mask = (np.asarray(qp) >= 0)[:, :, None, None]
+    tol = TOL[dtype]
+    np.testing.assert_allclose(np.asarray(o1, np.float32) * mask,
+                               np.asarray(o2, np.float32) * mask, **tol)
+
+
+@pytest.mark.parametrize("B,S,nh,nkv,hd,window", [
+    (2, 128, 8, 2, 32, 0),
+    (1, 300, 4, 4, 64, 0),     # non-divisible S
+    (3, 256, 8, 1, 16, 64),    # MQA + sliding window
+    (2, 64, 16, 4, 32, 0),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_gqa(B, S, nh, nkv, hd, window, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(ks[0], (B, nh, hd), dtype)
+    k = jax.random.normal(ks[1], (B, S, nkv, hd), dtype)
+    v = jax.random.normal(ks[2], (B, S, nkv, hd), dtype)
+    rng = np.random.default_rng(3)
+    kp = np.full((B, S), -1, np.int32)
+    qp = np.zeros(B, np.int32)
+    for b in range(B):
+        L = int(rng.integers(5, S))
+        kp[b, :L] = np.arange(L)
+        qp[b] = L - 1
+    o1 = decode_attention(q, k, v, jnp.asarray(qp), jnp.asarray(kp),
+                          window=window, block_kv=64)
+    o2 = decode_attention_ref(q, k, v, jnp.asarray(qp), jnp.asarray(kp),
+                              window=window)
+    np.testing.assert_allclose(np.asarray(o1, np.float32),
+                               np.asarray(o2, np.float32), **TOL[dtype])
+
+
+@pytest.mark.parametrize("B,L,H,P,N,chunk,use_h0", [
+    (2, 64, 4, 16, 8, 16, False),
+    (1, 50, 2, 32, 16, 16, True),     # non-divisible L (padding)
+    (2, 128, 8, 8, 4, 32, False),
+    (1, 33, 3, 8, 8, 8, True),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_scan(B, L, H, P, N, chunk, use_h0, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(4), 6)
+    x = (jax.random.normal(ks[0], (B, L, H, P)) * 0.5).astype(dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, L, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    Bm = (jax.random.normal(ks[3], (B, L, N)) * 0.5).astype(dtype)
+    Cm = (jax.random.normal(ks[4], (B, L, N)) * 0.5).astype(dtype)
+    h0 = (jax.random.normal(ks[5], (B, H, P, N)) * 0.2) if use_h0 else None
+    y1, h1 = ssd_scan(x, dt, A, Bm, Cm, chunk=chunk, h0=h0)
+    y2, h2 = ssd_scan_ref(x, dt, A, Bm, Cm, chunk=chunk, h0=h0)
+    tol = TOL[dtype]
+    np.testing.assert_allclose(np.asarray(y1, np.float32),
+                               np.asarray(y2, np.float32), **tol)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2),
+                               atol=tol["atol"] * 10, rtol=tol["rtol"] * 10)
+    # against sequential ground truth (f32 only: bf16 accumulates)
+    if dtype == jnp.float32:
+        y3, h3 = ssd_sequential_ref(x, dt, A, Bm, Cm, h0=h0)
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y3), atol=1e-4,
+                                   rtol=1e-4)

@@ -1,0 +1,178 @@
+"""Serving-system integration tests: engine, verification-aware
+scheduler (Algorithm 1), device runtime, and the end-to-end equivalence
+invariants of token-level synergy."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.synera_pair import tiny_pair
+from repro.core.offload import OffloadPolicy
+from repro.models import model as M
+from repro.serving.device import DeviceRuntime
+from repro.serving.engine import CloudEngine
+from repro.serving.scheduler import (PrefillRequest, VerifyRequest,
+                                     VerificationAwareScheduler)
+from repro.serving import synergy as SY
+
+
+@pytest.fixture(scope="module")
+def pair():
+    slm_cfg, llm_cfg = tiny_pair(vocab=64)
+    slm_p = M.init_params(slm_cfg, jax.random.PRNGKey(0))
+    llm_p = M.init_params(llm_cfg, jax.random.PRNGKey(1))
+    return slm_cfg, slm_p, llm_cfg, llm_p
+
+
+PROMPTS = [[1, 2, 3, 4, 5, 6, 7, 8], [9, 8, 7, 6, 5, 4, 3]]
+
+
+def test_scheduler_prefill_priority(pair):
+    """Algorithm 1: while prefills are queued, verifications wait."""
+    slm_cfg, slm_p, _, _ = pair
+    eng = CloudEngine(slm_cfg, slm_p, max_slots=2, s_max=128)
+    sched = VerificationAwareScheduler(eng)
+    sched.submit_prefill(PrefillRequest(1, np.arange(1, 9)))
+    evs = sched.run_iteration()
+    assert [e.kind for e in evs] == ["prefill_done"]
+    slot = evs[0].slot
+    sched.submit_prefill(PrefillRequest(2, np.arange(2, 9)))
+    sched.submit_verify(VerifyRequest(3, slot, uncached=np.array([], np.int64),
+                                      draft=np.array([1, 2, 3, 4]),
+                                      q_sparse=None))
+    evs = sched.run_iteration()
+    assert [e.kind for e in evs] == ["prefill_done"]  # prefill first
+    evs = sched.run_iteration()
+    assert [e.kind for e in evs] == ["verify_done"]
+
+
+def test_scheduler_chunked_partial_prefill(pair):
+    """A verification request longer than the Sarathi chunk is fed over
+    multiple iterations and completes with the right cloud frontier."""
+    slm_cfg, slm_p, _, _ = pair
+    eng = CloudEngine(slm_cfg, slm_p, max_slots=1, s_max=256)
+    sched = VerificationAwareScheduler(eng, chunk=32)
+    sched.submit_prefill(PrefillRequest(1, np.arange(1, 9)))
+    sched.run_iteration()
+    long_uncached = np.random.default_rng(0).integers(1, 60, size=70)
+    sched.submit_verify(VerifyRequest(2, 0, uncached=long_uncached,
+                                      draft=np.array([5, 6, 7, 8]),
+                                      q_sparse=None))
+    iters = 0
+    done = []
+    while sched.has_work() and iters < 10:
+        done += sched.run_iteration()
+        iters += 1
+    assert any(e.kind == "verify_done" for e in done)
+    # 74 tokens at chunk 32 -> 3 feed iterations
+    assert iters >= 3
+    res = done[-1].result
+    assert sched.cloud_len[0] == 8 + 70 + res.n_accepted
+
+
+def test_engine_slot_isolation(pair):
+    """Two slots decode independently: interleaved single-slot decode
+    equals batched decode."""
+    slm_cfg, slm_p, _, _ = pair
+    eng = CloudEngine(slm_cfg, slm_p, max_slots=2, s_max=64)
+    toks = np.zeros((2, 8), np.int32)
+    toks[0] = np.arange(1, 9); toks[1] = np.arange(9, 1, -1)
+    pos = np.broadcast_to(np.arange(8), (2, 8)).astype(np.int32).copy()
+    logits = eng.feed(toks, pos)
+    # reference: per-sequence full forward
+    for b in range(2):
+        full, _, _, _ = M.forward(slm_cfg, slm_p, jnp.asarray(toks[b:b+1]),
+                                  M.default_positions(1, 8))
+        np.testing.assert_allclose(logits[b], np.asarray(full[0]),
+                                   atol=2e-4, rtol=2e-3)
+
+
+def test_engine_reset_slot(pair):
+    slm_cfg, slm_p, _, _ = pair
+    eng = CloudEngine(slm_cfg, slm_p, max_slots=2, s_max=64)
+    toks = np.tile(np.arange(1, 9, dtype=np.int32), (2, 1))
+    pos = np.broadcast_to(np.arange(8), (2, 8)).astype(np.int32).copy()
+    eng.feed(toks, pos)
+    eng.reset_slot(0)
+    # slot 1 must be unaffected: decode continues correctly
+    t = np.array([[3], [3]], np.int32)
+    p = np.array([[8], [8]], np.int32)
+    logits = eng.decode(t, p)
+    ref_toks = np.concatenate([toks[1], [3]])
+    full, _, _, _ = M.forward(slm_cfg, slm_p, jnp.asarray(ref_toks[None]),
+                              M.default_positions(1, 9))
+    np.testing.assert_allclose(logits[1], np.asarray(full[0, -1]),
+                               atol=2e-4, rtol=2e-3)
+
+
+def test_synera_offload_all_equals_cloud_greedy(pair):
+    """The central speculative-decoding invariant: offloading every chunk
+    with greedy verification reproduces the cloud LLM's greedy stream."""
+    slm_cfg, slm_p, llm_cfg, llm_p = pair
+    dev = DeviceRuntime(slm_cfg, slm_p, s_max=256, gamma=4, seed=0)
+    eng = CloudEngine(llm_cfg, llm_p, max_slots=2, s_max=256)
+    r_cloud = SY.run_cloud_centric(eng, PROMPTS, 20)
+    r_syn = SY.run_synera(dev, eng, PROMPTS, 20, profile_mode=True)
+    assert r_syn.outputs == r_cloud.outputs
+
+
+def test_synera_pi_exactness(pair):
+    """Stall-free parallel inference must never change the token stream
+    (only mask latency)."""
+    slm_cfg, slm_p, llm_cfg, llm_p = pair
+    eng = CloudEngine(llm_cfg, llm_p, max_slots=2, s_max=256)
+    r_cloud = SY.run_cloud_centric(eng, PROMPTS, 20)
+    dev = DeviceRuntime(slm_cfg, slm_p, s_max=256, gamma=4, seed=0,
+                        policy=OffloadPolicy(mode="all"),
+                        use_early_exit=False, use_pi=True)
+    r = SY.run_synera(dev, eng, PROMPTS, 20)
+    assert r.outputs == r_cloud.outputs
+
+
+def test_synera_pi_adoption_with_identical_models(pair):
+    """SLM == LLM: every draft accepted; PI full-accept predictions adopt
+    and the stream still exactly matches."""
+    slm_cfg, slm_p, _, _ = pair
+    eng = CloudEngine(slm_cfg, slm_p, max_slots=2, s_max=256)
+    r_cloud = SY.run_cloud_centric(eng, PROMPTS, 20)
+    dev = DeviceRuntime(slm_cfg, slm_p, s_max=256, gamma=4, seed=0,
+                        policy=OffloadPolicy(mode="all"),
+                        use_early_exit=False, use_pi=True, alpha=0.97)
+    r = SY.run_synera(dev, eng, PROMPTS, 20)
+    assert r.outputs == r_cloud.outputs
+    m = r.metrics[0]
+    assert m.acceptance_rate > 0.99
+
+
+def test_edge_centric_runs_locally(pair):
+    slm_cfg, slm_p, _, _ = pair
+    dev = DeviceRuntime(slm_cfg, slm_p, s_max=256, gamma=4, seed=0)
+    r = SY.run_edge_centric(dev, PROMPTS, 16)
+    for m in r.metrics:
+        assert m.n_cloud_tokens == 0
+        assert len(m.tokens) == 16
+    assert r.cloud_fed_frac == 0.0
+
+
+def test_baselines_run(pair):
+    slm_cfg, slm_p, llm_cfg, llm_p = pair
+    dev = DeviceRuntime(slm_cfg, slm_p, s_max=256, gamma=4, seed=0)
+    eng = CloudEngine(llm_cfg, llm_p, max_slots=2, s_max=256)
+    rh = SY.run_hybrid(dev, eng, PROMPTS, 12)
+    re = SY.run_edgefm(dev, eng, PROMPTS, 12)
+    assert all(len(o) == 12 for o in rh.outputs)
+    assert all(len(o) == 12 for o in re.outputs)
+    # EdgeFM sends ~half the prompts (median threshold) fully to cloud
+    fracs = [m.cloud_token_frac for m in re.metrics]
+    assert any(f == 0 for f in fracs) and any(f > 0.9 for f in fracs)
+
+
+def test_device_profile_mode_records(pair):
+    slm_cfg, slm_p, llm_cfg, llm_p = pair
+    dev = DeviceRuntime(slm_cfg, slm_p, s_max=256, gamma=4, seed=0)
+    eng = CloudEngine(llm_cfg, llm_p, max_slots=2, s_max=256)
+    r = SY.run_synera(dev, eng, PROMPTS[:1], 16, profile_mode=True)
+    recs = r.metrics[0].chunk_records
+    assert len(recs) >= 3
+    assert all(0 <= c.n_accepted <= c.gamma for c in recs)

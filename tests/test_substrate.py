@@ -1,0 +1,157 @@
+"""Substrate tests: synthetic data pipeline, optimizer, checkpointing,
+HLO analyzer, link/cost models."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import io as ckpt
+from repro.data.synthetic import SyntheticTask, TaskSpec, batches
+from repro.optim.adamw import AdamW, clip_by_global_norm, cosine_schedule
+from repro.serving.link import (CloudLatencyModel, CostModel,
+                                DeviceLatencyModel, LinkModel)
+
+
+class TestSyntheticTask:
+    def setup_method(self):
+        self.task = SyntheticTask(TaskSpec(vocab=64))
+
+    def test_true_dist_is_distribution(self):
+        rng = np.random.default_rng(0)
+        seq, regimes = self.task.sample_sequence(128, rng)
+        for t in [1, 7, 16, 63, 64, 100]:
+            p = self.task.true_dist(seq, t, regimes)
+            assert abs(p.sum() - 1.0) < 1e-9
+            assert (p >= 0).all()
+
+    def test_copy_rule_deterministic(self):
+        rng = np.random.default_rng(1)
+        seq, regimes = self.task.sample_sequence(128, rng)
+        sp = self.task.spec
+        for t in range(sp.copy_back, 128):
+            if t % sp.copy_every == 0 and t % sp.regime_len != 0:
+                assert seq[t] == seq[t - sp.copy_back]
+
+    def test_score_perfect_continuation(self):
+        rng = np.random.default_rng(2)
+        seq, regimes = self.task.sample_sequence(128, rng)
+        s = self.task.score(seq, regimes, start=64)
+        assert s["copy_acc"] == 1.0
+        assert s["quality"] > 0.1  # true continuation has decent likelihood
+
+    def test_score_random_continuation_worse(self):
+        rng = np.random.default_rng(3)
+        seq, regimes = self.task.sample_sequence(128, rng)
+        good = self.task.score(seq, regimes, 64)
+        bad_seq = seq.copy()
+        bad_seq[64:] = rng.integers(0, 60, size=64)
+        bad = self.task.score(bad_seq, regimes, 64)
+        assert good["quality"] > bad["quality"]
+
+    def test_batches_shape(self):
+        corpus, _ = self.task.corpus(4, 512, seed=0)
+        it = batches(corpus, 8, 64, rng=np.random.default_rng(0))
+        b = next(it)
+        assert b.shape == (8, 64)
+        assert b.max() < 64
+
+
+class TestAdamW:
+    def test_converges_on_quadratic(self):
+        opt = AdamW(lr=0.1, weight_decay=0.0)
+        params = {"w": jnp.array([5.0, -3.0])}
+        state = opt.init(params)
+        for _ in range(200):
+            g = jax.grad(lambda p: jnp.sum(p["w"] ** 2))(params)
+            params, state, _ = opt.update(g, state, params)
+        assert float(jnp.abs(params["w"]).max()) < 0.05
+
+    def test_grad_clip(self):
+        g = {"a": jnp.full((4,), 100.0)}
+        clipped, gn = clip_by_global_norm(g, 1.0)
+        assert abs(float(jnp.linalg.norm(clipped["a"])) - 1.0) < 1e-5
+        assert float(gn) == pytest.approx(200.0)
+
+    def test_schedule(self):
+        lr = cosine_schedule(1.0, warmup=10, total=100)
+        assert float(lr(5)) == pytest.approx(0.5)
+        assert float(lr(10)) == pytest.approx(1.0, abs=0.02)
+        assert float(lr(100)) == pytest.approx(0.1, abs=0.02)
+
+    def test_state_dtype(self):
+        opt = AdamW(state_dtype=jnp.bfloat16)
+        st = opt.init({"w": jnp.zeros((3,))})
+        assert st.mu["w"].dtype == jnp.bfloat16
+
+
+class TestCheckpoint:
+    def test_roundtrip(self, tmp_path):
+        tree = {"a": jnp.arange(6.0).reshape(2, 3),
+                "b": {"c": jnp.ones((4,), jnp.int32)}}
+        p = str(tmp_path / "ck.npz")
+        ckpt.save(p, tree)
+        like = jax.tree.map(lambda x: jnp.zeros_like(x), tree)
+        back = ckpt.load(p, like)
+        for l1, l2 in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+            np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+
+
+class TestHloAnalysis:
+    def test_scan_flops_exact(self):
+        from repro.launch.hlo_analysis import analyze
+
+        def f(x, w):
+            def body(c, ww):
+                return jnp.tanh(c @ ww), None
+            y, _ = jax.lax.scan(body, x, w)
+            return y.sum()
+        co = jax.jit(f).lower(jnp.ones((8, 16)), jnp.ones((5, 16, 16))).compile()
+        r = analyze(co.as_text())
+        assert r["flops"] == pytest.approx(5 * 2 * 8 * 16 * 16, rel=0.01)
+        assert 5 in r["trip_counts"]
+        assert r["unresolved_dots"] == 0
+
+
+class TestLinkModels:
+    def test_transfer_scales_with_bytes(self):
+        link = LinkModel(bandwidth_mbps=8.0, rtt_ms=0.0)
+        assert link.transfer_ms(1_000_000) == pytest.approx(1000.0)
+
+    @given(st.floats(0.01, 1.0), st.floats(1.0, 1000.0))
+    @settings(max_examples=20, deadline=None)
+    def test_cost_monotone(self, frac, tbt):
+        cm = CostModel(packing_factor=13)
+        assert cm.cost(tbt, frac) <= cm.cost(tbt, min(frac * 2, 1.0)) + 1e-9
+
+    def test_early_exit_saves_latency_and_energy(self):
+        d = DeviceLatencyModel()
+        assert d.draft_ms(4, 0.75) < d.draft_ms(4, 1.0)
+        assert d.energy_j(4, 0.75) < d.energy_j(4, 1.0)
+
+
+class TestQuantize:
+    def test_fake_quant_error_bounded(self):
+        from repro.optim.quantize import fake_quant
+        import jax
+        w = jax.random.normal(jax.random.PRNGKey(0), (64, 32))
+        for bits, tol in ((8, 0.02), (4, 0.3)):
+            wq = fake_quant(w, bits)
+            err = float(jnp.abs(wq - w).max())
+            assert err < tol, (bits, err)
+
+    def test_quantize_params_preserves_structure(self):
+        from repro.optim.quantize import quantize_params
+        from repro.configs.synera_pair import tiny_pair
+        from repro.models import model as M
+        import jax
+        cfg, _ = tiny_pair(vocab=32)
+        p = M.init_params(cfg, jax.random.PRNGKey(0))
+        q = quantize_params(p, 8)
+        assert jax.tree.structure(p) == jax.tree.structure(q)
+        # norms untouched, projections changed
+        assert (q["final_norm"] == p["final_norm"]).all()
+        l0 = jax.tree.map(lambda x: x[0], p["layers"])
+        q0 = jax.tree.map(lambda x: x[0], q["layers"])
+        assert float(jnp.abs(q0["attn"]["wq"] - l0["attn"]["wq"]).max()) > 0
