@@ -1,0 +1,105 @@
+"""Scale benchmark: N concurrent device streams sharing one cloud
+verifier under the SyneraServer event loop (ROADMAP: heavy traffic /
+batching / async).
+
+For each stream count the same request set is served twice on a fresh
+slot state: sequentially (``concurrency=1``, the old blocking
+semantics) and concurrently (``concurrency=N``).  Greedy token streams
+are identical by construction (asserted); what changes is packing:
+
+  * verify-iteration batch occupancy (slots fed per iteration)
+  * packed tokens per iteration
+  * total scheduler iterations and cloud makespan (shared sim clock)
+  * per-stream mean/p95 TBT (includes real cross-stream queueing)
+  * estimated cloud cost (paper §6.1)
+
+Usage:
+  PYTHONPATH=src:. python -m benchmarks.scale_bench [--fast] \
+      [--streams 1,2,4,8] [--out benchmarks/BENCH_scale.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+
+def run_sweep(streams=(1, 2, 4, 8), max_new: int = 32, slots: int = 8,
+              budget_all: bool = True) -> dict:
+    from benchmarks import paper_claims as PC
+    from benchmarks.prepare import get_pair
+    from repro.core.offload import OffloadPolicy
+    from repro.serving import synergy as SY
+
+    slm_cfg, slm_p, llm_cfg, llm_p, task = get_pair()
+    dev = PC.make_device(slm_cfg, slm_p,
+                         policy=OffloadPolicy(mode="all"),
+                         use_early_exit=False)
+    eng = PC.make_engine(llm_cfg, llm_p, slots=slots)
+
+    rows = []
+    for n in streams:
+        evalset = PC.eval_set(task, n, seed=17)
+        prompts = [p for p, _ in evalset]
+
+        t0 = time.time()
+        r_seq = SY.run_synera(dev, eng, prompts, max_new, concurrency=1)
+        t_seq = time.time() - t0
+        seq = r_seq.extras["scheduler"]
+
+        t0 = time.time()
+        r_con = SY.run_synera(dev, eng, prompts, max_new,
+                              concurrency=min(n, slots))
+        t_con = time.time() - t0
+        con = r_con.extras["scheduler"]
+
+        assert r_con.outputs == r_seq.outputs, \
+            "concurrent serving must not change greedy token streams"
+
+        tbts = [m.tbt_ms for m in r_con.metrics]
+        n_tokens = sum(len(m.tokens) for m in r_con.metrics)
+        rows.append(dict(
+            streams=n,
+            occupancy=con["mean_verify_occupancy"],
+            max_occupancy=con["max_verify_occupancy"],
+            packed_tokens_per_iter=con["mean_packed_tokens"],
+            iterations=con["iterations"],
+            iterations_sequential=seq["iterations"],
+            makespan_ms=con["sim_ms"],
+            makespan_sequential_ms=seq["sim_ms"],
+            tbt_mean_ms=float(np.mean(tbts)),
+            tbt_p95_ms=float(np.quantile(tbts, 0.95)),
+            tbt_sequential_ms=r_seq.tbt_ms,
+            cost=r_con.cost,
+            tokens=n_tokens,
+            wall_s_sequential=t_seq,
+            wall_s_concurrent=t_con,
+        ))
+        print(f"streams={n:2d} occupancy={rows[-1]['occupancy']:.2f} "
+              f"packed_tok/iter={rows[-1]['packed_tokens_per_iter']:.1f} "
+              f"iters={rows[-1]['iterations']} "
+              f"(seq {rows[-1]['iterations_sequential']}) "
+              f"tbt={rows[-1]['tbt_mean_ms']:.1f}ms "
+              f"p95={rows[-1]['tbt_p95_ms']:.1f}ms", flush=True)
+    return dict(slots=slots, max_new=max_new, rows=rows)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--streams", default="1,2,4,8")
+    ap.add_argument("--slots", type=int, default=8)
+    ap.add_argument("--out", default="benchmarks/BENCH_scale.json")
+    args = ap.parse_args()
+    streams = tuple(int(s) for s in args.streams.split(","))
+    res = run_sweep(streams=streams, max_new=16 if args.fast else 32,
+                    slots=args.slots)
+    with open(args.out, "w") as f:
+        json.dump(res, f, indent=2)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -41,6 +41,7 @@ def main():
                         mode="both")
     cost_model = CostModel()
 
+    dev_syn = PC.make_device(slm_cfg, slm_p, policy=pol, alpha=profile.alpha)
     runs = {
         "edge-centric": SY.run_edge_centric(
             PC.make_device(slm_cfg, slm_p,
@@ -49,8 +50,13 @@ def main():
         "cloud-centric": SY.run_cloud_centric(
             eng, prompts, args.max_new, cost_model=cost_model),
         "synera": SY.run_synera(
-            PC.make_device(slm_cfg, slm_p, policy=pol, alpha=profile.alpha),
-            eng, prompts, args.max_new, cost_model=cost_model),
+            dev_syn, eng, prompts, args.max_new, cost_model=cost_model),
+        # multi-tenant: all streams share the engine through the
+        # SyneraServer event loop (identical greedy outputs, packed
+        # verify iterations)
+        "synera-batched": SY.run_synera(
+            dev_syn, eng, prompts, args.max_new, cost_model=cost_model,
+            concurrency=min(len(prompts), 4)),
     }
 
     print(f"\n{'method':15s} {'quality':>8s} {'copy_acc':>9s} "
@@ -64,6 +70,12 @@ def main():
     print(f"\nsynera detail: PI hits {m.pi_position_hits}/{m.pi_attempts}, "
           f"layers saved {m.mean_layers_saved:.1%}, "
           f"stall {m.timeline.stall_ms:.0f} ms of {m.timeline.t_ms:.0f} ms")
+    st = runs["synera-batched"].extras["scheduler"]
+    print(f"batched serving: verify occupancy "
+          f"{st['mean_verify_occupancy']:.2f} slots/iter "
+          f"(max {st['max_verify_occupancy']}), "
+          f"{st['mean_packed_tokens']:.1f} packed tokens/iter, "
+          f"{st['iterations']} iterations")
 
 
 if __name__ == "__main__":

@@ -3,14 +3,21 @@ scheduler for a trained model pair and serve a batch of requests across
 the chosen mode.
 
   PYTHONPATH=src:. python -m repro.launch.serve --mode synera \
-      --budget 0.2 --requests 8 --max-new 48
+      --budget 0.2 --requests 8 --max-new 48 --concurrency 4
 
 Modes: synera | edge | cloud | hybrid | edgefm.
+
+``--concurrency N`` (synera/hybrid) serves N device streams at once
+through the SyneraServer event loop so cloud verify iterations pack
+chunks from multiple slots; ``--concurrency 0`` means unbounded.
+``--arrival-rate R`` draws Poisson request arrivals at R req/s on the
+shared simulated clock (default: all streams arrive at admission).
 """
 from __future__ import annotations
 
 import argparse
 import json
+import sys
 
 import numpy as np
 
@@ -26,8 +33,15 @@ def main():
     ap.add_argument("--bandwidth-mbps", type=float, default=10.0)
     ap.add_argument("--gamma", type=int, default=4)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--concurrency", type=int, default=1,
+                    help="concurrent device sessions (0 = unbounded)")
+    ap.add_argument("--arrival-rate", type=float, default=0.0,
+                    help="Poisson arrivals in requests/s of simulated "
+                         "time (0 = arrive at admission)")
     ap.add_argument("--json", action="store_true")
     args = ap.parse_args()
+    if args.concurrency < 0:
+        ap.error("--concurrency must be >= 0 (0 = unbounded)")
 
     from benchmarks import paper_claims as PC
     from benchmarks.prepare import get_pair
@@ -40,6 +54,18 @@ def main():
     prompts = [p for p, _ in evalset]
     link = LinkModel(bandwidth_mbps=args.bandwidth_mbps)
     eng = PC.make_engine(llm_cfg, llm_p, slots=args.slots)
+    concurrency = None if args.concurrency == 0 else args.concurrency
+    arrivals = None
+    if args.arrival_rate > 0:
+        rng = np.random.default_rng(args.seed + 13)
+        gaps = rng.exponential(1e3 / args.arrival_rate, len(prompts))
+        arrivals = np.cumsum(gaps).tolist()
+
+    if args.mode not in ("synera", "hybrid") and (args.concurrency != 1
+                                                  or arrivals is not None):
+        print(f"warning: --concurrency/--arrival-rate only apply to "
+              f"synera/hybrid; ignored for --mode {args.mode}",
+              file=sys.stderr)
 
     if args.mode in ("synera", "hybrid", "edgefm"):
         dev0 = PC.make_device(slm_cfg, slm_p, link=link, gamma=args.gamma,
@@ -57,11 +83,15 @@ def main():
                              policy=OffloadPolicy(mode="none"))
 
     run = {
-        "synera": lambda: SY.run_synera(dev, eng, prompts, args.max_new),
+        "synera": lambda: SY.run_synera(dev, eng, prompts, args.max_new,
+                                        concurrency=concurrency,
+                                        arrivals=arrivals),
         "edge": lambda: SY.run_edge_centric(dev, prompts, args.max_new),
         "cloud": lambda: SY.run_cloud_centric(eng, prompts, args.max_new,
                                               link=link),
-        "hybrid": lambda: SY.run_hybrid(dev, eng, prompts, args.max_new),
+        "hybrid": lambda: SY.run_hybrid(dev, eng, prompts, args.max_new,
+                                        concurrency=concurrency,
+                                        arrivals=arrivals),
         "edgefm": lambda: SY.run_edgefm(dev, eng, prompts, args.max_new,
                                         link=link),
     }[args.mode]
@@ -70,6 +100,13 @@ def main():
     summary = dict(mode=args.mode, n=len(prompts), quality=s["quality"],
                    copy_acc=s["copy_acc"], tbt_ms=r.tbt_ms, cost=r.cost,
                    cloud_token_frac=r.cloud_token_frac)
+    sched = r.extras.get("scheduler")
+    if sched is not None:
+        summary.update(
+            concurrency=args.concurrency,
+            verify_occupancy=sched["mean_verify_occupancy"],
+            packed_tokens=sched["mean_packed_tokens"],
+            iterations=sched["iterations"])
     if args.json:
         print(json.dumps(summary))
     else:

@@ -10,6 +10,12 @@ Runs the on-device SLM with:
   * compression of the transmitted distributions,
   * stall-free parallel inference (rejection-position prediction + PI).
 
+The generation loop is a resumable coroutine (``generate_steps``) that
+yields ``CloudCall`` requests and is resumed with ``CloudReply``
+responses, so a ``SyneraServer`` can interleave many concurrent streams
+over one cloud engine; ``generate`` is the blocking single-stream
+driver over it.
+
 Position bookkeeping invariant: ``seq`` is the accepted token stream
 (prompt + output).  At the top of every loop iteration, positions
 0..len(seq)-2 are in the device cache and ``seq[-1]`` is not yet fed.
@@ -38,6 +44,41 @@ from repro.core.profiling import ChunkRecord
 from repro.models import layers as L
 from repro.models import model as M
 from repro.serving.link import DeviceLatencyModel, LinkModel, Timeline
+
+
+@dataclass
+class CloudCall:
+    """A cloud request emitted by the device generation coroutine.
+
+    ``send_ms`` is the *device-stream-relative* time the payload leaves
+    the device; the serving layer maps it onto the shared absolute clock
+    (``session.start_ms + send_ms``).  ``arrival_ms`` (still stream
+    relative) adds the uplink transfer.
+    """
+    kind: str                     # "prefill" | "verify"
+    send_ms: float
+    uplink_ms: float
+    prompt: list | None = None    # prefill
+    seq: list | None = None       # verify: accepted stream (prompt+output)
+    draft: list | None = None     # verify: pending draft tokens
+    dists: list | None = None     # verify: compressed SLM dists
+
+    @property
+    def arrival_ms(self) -> float:
+        return self.send_ms + self.uplink_ms
+
+
+@dataclass
+class CloudReply:
+    """Response delivered back into the coroutine for a verify call.
+
+    ``cloud_ms`` is time spent at the cloud from request arrival to
+    completion — queueing behind other streams *plus* compute, as
+    measured on the shared clock.
+    """
+    result: object = None         # VerifyResult
+    cloud_ms: float = 0.0
+    fed_tokens: int = 0           # tokens this request fed the cloud LLM
 
 
 @dataclass
@@ -203,11 +244,49 @@ class DeviceRuntime:
     # ------------------------------------------------------------------
     def generate(self, prompt: list[int], max_new: int, cloud=None,
                  profile_mode: bool = False) -> DeviceMetrics:
-        """Generate up to ``max_new`` tokens after the prompt.
+        """Generate up to ``max_new`` tokens after the prompt (blocking).
 
         ``cloud`` implements the CloudClient protocol (serving/synergy.py)
         or None for edge-centric generation.  profile_mode offloads every
         chunk and records ChunkRecords for offline profiling (§5).
+
+        This is a thin synchronous driver over :meth:`generate_steps`;
+        multi-tenant serving drives the coroutine directly through
+        ``SyneraServer`` so device compute from many streams interleaves
+        with shared cloud iterations.
+        """
+        gen = self.generate_steps(prompt, max_new,
+                                  use_cloud=cloud is not None,
+                                  profile_mode=profile_mode)
+        reply = None
+        while True:
+            try:
+                call = gen.send(reply)
+            except StopIteration as e:
+                return e.value
+            if call.kind == "prefill":
+                cloud.prefill(call.prompt, arrival_ms=call.arrival_ms)
+                reply = None
+            else:
+                result, cloud_ms = cloud.verify(
+                    seq=call.seq, draft=call.draft, dists=call.dists,
+                    arrival_ms=call.arrival_ms)
+                reply = CloudReply(result=result, cloud_ms=cloud_ms,
+                                   fed_tokens=cloud.last_fed_tokens)
+
+    def generate_steps(self, prompt: list[int], max_new: int, *,
+                       use_cloud: bool = True, profile_mode: bool = False):
+        """Device generation as a resumable coroutine.
+
+        Yields a :class:`CloudCall` whenever the stream needs the cloud;
+        the driver resumes it with ``None`` for fire-and-forget prefill
+        notifications and with a :class:`CloudReply` carrying the
+        ``VerifyResult`` for verify calls.  Returns (via StopIteration)
+        the stream's :class:`DeviceMetrics`.
+
+        All device-side state (KV cache, accepted stream, timeline) lives
+        in this generator's frame, so one ``DeviceRuntime`` (weights +
+        jitted steps) can back arbitrarily many concurrent sessions.
         """
         m = DeviceMetrics()
         cache = M.init_cache(self.cfg, 1, self.s_max)
@@ -231,11 +310,14 @@ class DeviceRuntime:
         m.timeline.advance(self.latency.draft_ms(T - 1, 1.0), "compute")
         m.timeline.energy_j += self.latency.energy_j(T - 1, 1.0)
 
-        if cloud is not None:
+        if use_cloud:
             up = 4 * T + 32
             m.uplink_bytes += up
             dt = self.link.transfer_ms(up)
-            cloud.prefill(prompt, arrival_ms=m.timeline.t_ms + dt)
+            # fire-and-forget: cloud prefill overlaps device drafting; the
+            # scheduler serializes it before this stream's first verify
+            yield CloudCall("prefill", send_ms=m.timeline.t_ms,
+                            uplink_ms=dt, prompt=prompt)
 
         seq = list(prompt)     # invariant: seq[:-1] fed, seq[-1] not fed
         pi_chunk = None
@@ -251,7 +333,7 @@ class DeviceRuntime:
             mean_conf = float(np.mean(confs))
             mean_imp = float(np.mean(imp))
 
-            do_offload = cloud is not None
+            do_offload = use_cloud
             if do_offload and not profile_mode:
                 do_offload = self.policy.should_offload(
                     rng_off, mean_conf, mean_imp,
@@ -310,10 +392,12 @@ class DeviceRuntime:
             overlap_ms = m.timeline.t_ms - overlap_t0
 
             # ---- cloud round trip ---------------------------------------
-            result, cloud_ms = cloud.verify(
-                seq=seq, draft=tokens, dists=dists,
-                arrival_ms=overlap_t0 + uplink_ms)
-            m.n_cloud_fed_tokens += cloud.last_fed_tokens
+            reply = yield CloudCall("verify", send_ms=overlap_t0,
+                                    uplink_ms=uplink_ms,
+                                    seq=list(seq), draft=list(tokens),
+                                    dists=dists)
+            result, cloud_ms = reply.result, reply.cloud_ms
+            m.n_cloud_fed_tokens += reply.fed_tokens
             down_bytes = 32 + 4 * (len(result.tokens) + 1)
             m.downlink_bytes += down_bytes
             rtt_ms = (uplink_ms + cloud_ms

@@ -16,6 +16,29 @@ from dataclasses import dataclass, field
 
 
 @dataclass
+class SimClock:
+    """Shared discrete-event clock (absolute simulated milliseconds).
+
+    One instance is shared by the ``SyneraServer`` event loop and the
+    ``VerificationAwareScheduler`` so that device-stream arrival times
+    and cloud iteration costs live on a single time axis: the scheduler
+    fast-forwards to the next request arrival when idle and advances by
+    iteration cost when busy, so per-stream round-trip times measured
+    against this clock include real cross-stream queueing.
+    """
+    now_ms: float = 0.0
+
+    def advance(self, dt_ms: float) -> float:
+        self.now_ms += dt_ms
+        return self.now_ms
+
+    def advance_to(self, t_ms: float) -> float:
+        """Fast-forward (never rewind) to an absolute time."""
+        self.now_ms = max(self.now_ms, t_ms)
+        return self.now_ms
+
+
+@dataclass
 class LinkModel:
     bandwidth_mbps: float = 10.0
     rtt_ms: float = 20.0

@@ -2,16 +2,32 @@
 
 Batching policy over the CloudEngine:
 
-* Prefill requests are prioritized: while any are queued, an iteration
-  executes a prefill batch (lines 5-11 of Algorithm 1).
+* Prefill requests are prioritized: while any are queued *and a slot is
+  free*, an iteration executes a prefill batch (lines 5-11 of
+  Algorithm 1).  When prefills are queued but no slot is free, the
+  iteration falls through to verification work — completing
+  verifications is what eventually releases slots, so stalling here
+  would deadlock the head of the line.
 * Otherwise, queued verification requests are batched.  Each request is
   a *partial prefill*: device-accepted-but-uncached tokens followed by
   pending-verify draft tokens, executed over the slot's cached prefix.
   Requests are segmented into fixed-size chunks (Sarathi-style, default
-  32) so iterations stay uniform (lines 12-21).
+  32) so iterations stay uniform (lines 12-21).  One iteration packs at
+  most one chunk per slot but chunks from *many* slots — this is where
+  multi-tenant batching happens.
 * When a request's last chunk completes, the draft tokens are verified
   ("draft & verify") from the collected logits rows and the result is
   emitted.
+
+Time: the scheduler shares a ``SimClock`` (serving/link.py) with
+whoever drives it (the ``SyneraServer`` event loop, or a private clock
+for the legacy blocking facade).  Requests carry an absolute
+``arrival_ms``; a request is only admitted into an iteration once the
+clock has reached its arrival.  When the scheduler is idle it
+fast-forwards to the earliest queued arrival, and when it executes a
+batch it advances the clock by the iteration's modeled cost — so
+completion times measured on this clock reflect genuine queueing behind
+other streams' work, not a per-request private accumulator.
 
 The scheduler also supports plain decode streams (the cloud-centric
 baseline) through ``decode_iteration``.
@@ -25,7 +41,7 @@ import numpy as np
 
 from repro.core import verifier as V
 from repro.serving.engine import CloudEngine
-from repro.serving.link import CloudLatencyModel
+from repro.serving.link import CloudLatencyModel, SimClock
 
 
 @dataclass
@@ -33,6 +49,7 @@ class PrefillRequest:
     req_id: int
     tokens: np.ndarray            # (T,) prompt
     slot: int = -1
+    arrival_ms: float = 0.0       # absolute arrival on the shared clock
 
 
 @dataclass
@@ -44,6 +61,7 @@ class VerifyRequest:
     q_sparse: list                # compressed SLM dists per draft position
     sampling: str = "greedy"
     start_pos: int = 0            # absolute position of uncached[0]
+    arrival_ms: float = 0.0       # absolute arrival on the shared clock
     # internal
     fed: int = 0
     rows: list = field(default_factory=list)  # (abs_pos, logits row)
@@ -61,19 +79,40 @@ class SchedulerEvent:
 class VerificationAwareScheduler:
     def __init__(self, engine: CloudEngine, *, chunk: int = 32,
                  latency: CloudLatencyModel | None = None,
-                 rng: np.random.Generator | None = None):
+                 rng: np.random.Generator | None = None,
+                 clock: SimClock | None = None):
         self.engine = engine
         self.chunk = chunk
         self.latency = latency or CloudLatencyModel()
         self.rng = rng or np.random.default_rng(0)
+        self.clock = clock or SimClock()
         self.prefill_q: deque[PrefillRequest] = deque()
         self.verify_q: deque[VerifyRequest] = deque()
         self.active_verify: list[VerifyRequest] = []
         self.free_slots = list(range(engine.max_slots))
         self.cloud_len = np.zeros(engine.max_slots, np.int64)
         self.last_row: dict[int, np.ndarray] = {}  # slot -> last fed logits row
-        self.iterations = 0
-        self.sim_ms = 0.0
+        self.iterations = 0           # iterations that executed a batch
+        self.prefill_iterations = 0
+        self.verify_iterations = 0
+        self.verify_occupancy: list[int] = []  # slots packed per verify iter
+        self.verify_tokens_fed: list[int] = []  # tokens packed per verify iter
+        self._req_counter = 0
+
+    @property
+    def sim_ms(self) -> float:
+        return self.clock.now_ms
+
+    def next_req_id(self) -> int:
+        """Globally unique request id (unique per scheduler, so events
+        from concurrent clients never collide)."""
+        self._req_counter += 1
+        return self._req_counter
+
+    @property
+    def mean_verify_occupancy(self) -> float:
+        occ = self.verify_occupancy
+        return float(np.mean(occ)) if occ else 0.0
 
     # ------------------------------------------------------------------
     def submit_prefill(self, req: PrefillRequest):
@@ -97,21 +136,48 @@ class VerificationAwareScheduler:
     # ------------------------------------------------------------------
     def run_iteration(self) -> list[SchedulerEvent]:
         """One scheduling iteration (one trip through Algorithm 1's loop).
-        Returns completion events; advances the simulated clock."""
-        self.iterations += 1
-        if self.prefill_q:
-            return self._prefill_iteration()
+
+        Returns completion events.  If no queued request has arrived yet
+        (shared-clock semantics), fast-forwards the clock to the next
+        arrival and returns [] — callers loop while ``has_work()``.
+        """
+        now = self.clock.now_ms
+        if self.prefill_q and self.free_slots and \
+                any(r.arrival_ms <= now for r in self.prefill_q):
+            evs = self._prefill_iteration(now)
+            if evs:
+                self.iterations += 1
+                return evs
         if self.verify_q or self.active_verify:
-            return self._verify_iteration()
+            evs = self._verify_iteration(now)
+            if evs is not None:
+                self.iterations += 1
+                return evs
+        # Nothing executable at `now`: fast-forward to the next *future*
+        # arrival.  Requests that have already arrived but are blocked
+        # (e.g. a prefill with no free slot) must not pin the clock —
+        # unblocking them needs an external action (slot release), not
+        # time.
+        future = [a for a in
+                  ([r.arrival_ms for r in self.prefill_q]
+                   + [r.arrival_ms for r in self.verify_q])
+                  if a > now]
+        if future:
+            self.clock.advance_to(min(future))
         return []
 
     # -- prefill (lines 5-11) ------------------------------------------
-    def _prefill_iteration(self) -> list[SchedulerEvent]:
+    def _prefill_iteration(self, now: float) -> list[SchedulerEvent]:
         batch: list[PrefillRequest] = []
-        while self.prefill_q and self.free_slots:
+        rest: deque[PrefillRequest] = deque()
+        while self.prefill_q:
             req = self.prefill_q.popleft()
+            if req.arrival_ms > now or not self.free_slots:
+                rest.append(req)
+                continue
             req.slot = self.free_slots.pop()
             batch.append(req)
+        self.prefill_q = rest
         if not batch:
             return []  # wait for a free slot
 
@@ -127,7 +193,8 @@ class VerificationAwareScheduler:
 
         events = []
         total = sum(len(r.tokens) for r in batch)
-        self.sim_ms += self.latency.prefill_ms(total)
+        self.clock.advance(self.latency.prefill_ms(total))
+        self.prefill_iterations += 1
         for r in batch:
             T = len(r.tokens)
             self.cloud_len[r.slot] = T
@@ -138,9 +205,17 @@ class VerificationAwareScheduler:
         return events
 
     # -- verification partial prefill (lines 12-21) ---------------------
-    def _verify_iteration(self) -> list[SchedulerEvent]:
+    def _verify_iteration(self, now: float) -> list[SchedulerEvent] | None:
+        """Returns events for the executed batch, or None if no verify
+        chunk was admissible at ``now`` (caller decides how to wait)."""
+        still: deque[VerifyRequest] = deque()
         while self.verify_q:
-            self.active_verify.append(self.verify_q.popleft())
+            r = self.verify_q.popleft()
+            if r.arrival_ms <= now:
+                self.active_verify.append(r)
+            else:
+                still.append(r)
+        self.verify_q = still
 
         B = self.engine.max_slots
         C = self.chunk
@@ -162,10 +237,13 @@ class VerificationAwareScheduler:
             used_slots.add(req.slot)
 
         if not feeding:
-            return []
+            return None
         logits = self.engine.feed(tokens, positions)
         total = sum(n for _, _, n in feeding)
-        self.sim_ms += self.latency.iteration_ms(total)
+        self.clock.advance(self.latency.iteration_ms(total))
+        self.verify_iterations += 1
+        self.verify_occupancy.append(len(feeding))
+        self.verify_tokens_fed.append(total)
 
         events = []
         for req, fed0, n in feeding:
@@ -211,5 +289,5 @@ class VerificationAwareScheduler:
         """tokens/positions: (max_slots, 1); position -1 = idle slot."""
         logits = self.engine.decode(tokens, positions)
         active = int((positions >= 0).sum())
-        self.sim_ms += self.latency.iteration_ms(active)
+        self.clock.advance(self.latency.iteration_ms(active))
         return logits

@@ -1,0 +1,248 @@
+"""Multi-tenant serving front-end: ``SyneraServer`` + ``DeviceSession``.
+
+This is the non-blocking redesign of the serving layer (ROADMAP: scale
+items).  The server owns the shared cloud side — ``CloudEngine``,
+``VerificationAwareScheduler`` and one global discrete-event
+``SimClock`` — while each ``DeviceSession`` wraps one device stream's
+generation coroutine (``DeviceRuntime.generate_steps``) together with
+its ``CloudClient`` handle.
+
+Event-loop semantics
+--------------------
+
+Each session is a state machine::
+
+    running --(yields verify, no slot yet)--> wait_slot
+    running --(yields verify, has slot)-----> wait_cloud
+    wait_slot --(prefill_done)--------------> wait_cloud
+    wait_cloud --(verify_done)--------------> running
+    running --(StopIteration)---------------> done
+
+One ``step()`` of the loop first advances every *running* session until
+it either finishes or parks on a cloud round trip — device draft
+compute advances only that stream's private timeline — then executes
+one scheduler iteration on the shared clock.  Because all runnable
+streams are drained before the cloud runs, verification requests from
+many sessions coexist in the scheduler's queues and one verify
+iteration genuinely packs chunks from multiple slots (Algorithm 1 at
+scale, §4.5).
+
+Clocks: a session's device timeline is stream-relative; ``start_ms``
+anchors it on the shared absolute clock.  A ``CloudCall`` sent at
+device time ``t`` arrives at the cloud at ``start_ms + t + uplink``;
+the scheduler fast-forwards to arrivals when idle and advances by
+iteration cost when busy, so the reply's ``cloud_ms`` (completion -
+arrival) includes genuine cross-stream queueing.  The stall the device
+experiences is ``max(uplink + cloud_ms + downlink - overlap, 0)``,
+exactly as in the blocking path — which is the ``concurrency=1``
+special case and reproduces it metric-for-metric.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+
+from repro.serving.device import CloudReply, DeviceRuntime
+from repro.serving.engine import CloudEngine
+from repro.serving.link import CloudLatencyModel, SimClock
+from repro.serving.scheduler import VerificationAwareScheduler
+from repro.serving.synergy import CloudClient
+
+RUNNING = "running"
+WAIT_SLOT = "wait_slot"    # verify ready but prompt prefill not yet done
+WAIT_CLOUD = "wait_cloud"  # verify in flight
+DONE = "done"
+
+
+@dataclass
+class DeviceSession:
+    """One device stream: generation coroutine + cloud client + timing."""
+    sid: int
+    gen: object                    # generate_steps coroutine
+    client: CloudClient
+    start_ms: float                # absolute anchor of the device timeline
+    state: str = RUNNING
+    metrics: object = None         # DeviceMetrics once done
+    pending_call: object = None    # CloudCall parked while waiting for slot
+    arrival_abs_ms: float = 0.0    # absolute arrival of in-flight verify
+    prefill_rid: int | None = None  # in-flight prompt prefill request id
+    slots_used: list = field(default_factory=list)
+
+    @property
+    def done(self) -> bool:
+        return self.state == DONE
+
+
+class SyneraServer:
+    """Owns the cloud side and interleaves N concurrent device sessions."""
+
+    def __init__(self, device: DeviceRuntime, engine: CloudEngine, *,
+                 chunk: int = 32, sampling: str = "greedy",
+                 latency: CloudLatencyModel | None = None,
+                 clock: SimClock | None = None):
+        self.device = device
+        self.engine = engine
+        self.sampling = sampling
+        self.clock = clock or SimClock()
+        self.sched = VerificationAwareScheduler(
+            engine, chunk=chunk, latency=latency, clock=self.clock)
+        self.sessions: list[DeviceSession] = []
+        self._by_req: dict[int, tuple[DeviceSession, str]] = {}
+        self._fresh: deque[DeviceSession] = deque()  # opened, not yet run
+        self._done_count = 0
+
+    # ------------------------------------------------------------------
+    def open_session(self, prompt, max_new: int, *,
+                     arrival_ms: float | None = None,
+                     profile_mode: bool = False) -> DeviceSession:
+        """Register a new device stream.  ``arrival_ms`` anchors the
+        stream's device timeline on the shared clock; default is "now"
+        (the stream starts when it is admitted)."""
+        start = self.clock.now_ms if arrival_ms is None else arrival_ms
+        gen = self.device.generate_steps(prompt, max_new, use_cloud=True,
+                                         profile_mode=profile_mode)
+        client = CloudClient(self.sched, sampling=self.sampling)
+        s = DeviceSession(sid=len(self.sessions), gen=gen, client=client,
+                          start_ms=start)
+        self.sessions.append(s)
+        self._fresh.append(s)
+        return s
+
+    # ------------------------------------------------------------------
+    def _submit_verify(self, s: DeviceSession, call) -> None:
+        arr = s.start_ms + call.arrival_ms
+        rid = s.client.verify_async(call.seq, call.draft, call.dists,
+                                    arrival_ms=arr)
+        self._by_req[rid] = (s, "verify")
+        s.arrival_abs_ms = arr
+        s.state = WAIT_CLOUD
+
+    def _advance(self, s: DeviceSession, reply) -> None:
+        """Drive one session until it parks on the cloud or finishes."""
+        while True:
+            try:
+                call = s.gen.send(reply)
+            except StopIteration as e:
+                s.metrics = e.value
+                s.state = DONE
+                self._done_count += 1
+                had_slot = s.client.slot is not None
+                s.client.release()
+                if s.prefill_rid is not None and not had_slot:
+                    # the stream never contacted the cloud again (e.g. no
+                    # chunk offloaded): cancel the still-queued prompt
+                    # prefill so it cannot later grab — and leak — a slot
+                    self.sched.prefill_q = deque(
+                        r for r in self.sched.prefill_q
+                        if r.req_id != s.prefill_rid)
+                    self._by_req.pop(s.prefill_rid, None)
+                return
+            reply = None
+            if call.kind == "prefill":
+                rid = s.client.prefill_async(
+                    call.prompt, arrival_ms=s.start_ms + call.arrival_ms)
+                s.prefill_rid = rid
+                self._by_req[rid] = (s, "prefill")
+                continue  # fire-and-forget: the device keeps drafting
+            if s.client.slot is None:
+                # first verify raced ahead of the prompt prefill
+                s.pending_call = call
+                s.state = WAIT_SLOT
+            else:
+                self._submit_verify(s, call)
+            return
+
+    # ------------------------------------------------------------------
+    def step(self) -> bool:
+        """One event-loop step: drain runnable sessions, then execute one
+        scheduler iteration and deliver its completions.  Returns False
+        once every session is done."""
+        # Only freshly opened sessions start in `running`; every other
+        # transition back to `running` is advanced inline when its event
+        # is delivered below, so no full-session scan is needed.
+        progressed = bool(self._fresh)
+        while self._fresh:
+            self._advance(self._fresh.popleft(), None)
+        if self._done_count == len(self.sessions):
+            return False
+
+        t_before = self.clock.now_ms
+        events = self.sched.run_iteration()
+        for ev in events:
+            entry = self._by_req.pop(ev.req_id, None)
+            if entry is None:
+                continue
+            s, kind = entry
+            s.client.on_event(ev)
+            if kind == "prefill":
+                s.slots_used.append(ev.slot)
+                if s.done:
+                    # the stream finished before its prefill executed
+                    # (cancellation raced the iteration): free the slot
+                    s.client.release()
+                elif s.pending_call is not None:
+                    call, s.pending_call = s.pending_call, None
+                    self._submit_verify(s, call)
+            else:
+                cloud_ms = self.clock.now_ms - s.arrival_abs_ms
+                reply = CloudReply(result=ev.result, cloud_ms=cloud_ms,
+                                   fed_tokens=s.client.last_fed_tokens)
+                s.state = RUNNING
+                self._advance(s, reply)
+        if (not events and not progressed
+                and self.clock.now_ms == t_before):
+            raise RuntimeError(
+                "SyneraServer stalled: sessions waiting but no scheduler "
+                "event fired and the clock cannot advance")
+        return self._done_count < len(self.sessions)
+
+    def run(self) -> list:
+        """Drive all open sessions to completion; returns their metrics
+        in open order."""
+        while self.step():
+            pass
+        return [s.metrics for s in self.sessions]
+
+    # ------------------------------------------------------------------
+    def serve(self, prompts, max_new: int, *,
+              concurrency: int | None = None,
+              arrivals: list[float] | None = None,
+              profile_mode: bool = False) -> list:
+        """Admission-controlled convenience driver: keep at most
+        ``concurrency`` sessions open (None = all at once), optionally
+        anchoring each stream at an absolute ``arrivals[i]`` offset.
+        Returns per-stream DeviceMetrics in prompt order."""
+        if concurrency is not None and concurrency < 1:
+            raise ValueError(f"concurrency must be >= 1 or None "
+                             f"(unbounded), got {concurrency}")
+        first = len(self.sessions)
+        idx = 0
+        active: list[DeviceSession] = []
+        while idx < len(prompts) or active:
+            while idx < len(prompts) and (concurrency is None
+                                          or len(active) < concurrency):
+                arr = None if arrivals is None else arrivals[idx]
+                s = self.open_session(prompts[idx], max_new,
+                                      arrival_ms=arr,
+                                      profile_mode=profile_mode)
+                active.append(s)
+                idx += 1
+            self.step()
+            active = [s for s in active if not s.done]
+        return [s.metrics for s in self.sessions[first:]]
+
+    # ------------------------------------------------------------------
+    def stats(self) -> dict:
+        """Batching-efficiency counters from the shared scheduler."""
+        sched = self.sched
+        occ = sched.verify_occupancy
+        toks = sched.verify_tokens_fed
+        return dict(
+            iterations=sched.iterations,
+            prefill_iterations=sched.prefill_iterations,
+            verify_iterations=sched.verify_iterations,
+            mean_verify_occupancy=sched.mean_verify_occupancy,
+            max_verify_occupancy=max(occ) if occ else 0,
+            mean_packed_tokens=(sum(toks) / len(toks)) if toks else 0.0,
+            sim_ms=self.clock.now_ms,
+        )

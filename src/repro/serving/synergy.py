@@ -1,12 +1,19 @@
 """End-to-end device-cloud orchestration (Fig 8) and the paper's four
 baselines (§6.1): Edge-centric, Cloud-centric, Hybrid [9], EdgeFM-LLM.
 
-``CloudClient`` is a synchronous facade that a DeviceRuntime calls; it
-submits requests to the verification-aware scheduler and spins the
-scheduler's iteration loop until its request completes, returning both
-the verification result and the modeled cloud latency (queueing +
-compute).  Token streams are real model outputs; only wall-clock is
-modeled (see serving/link.py).
+``CloudClient`` is one device stream's handle on the cloud runtime.  It
+exposes non-blocking submission (``prefill_async`` / ``verify_async``)
+used by the multi-tenant ``SyneraServer`` event loop
+(serving/server.py), plus the legacy blocking facade (``prefill`` /
+``verify``) that spins the scheduler until its own request completes —
+kept for single-stream baselines such as the cloud-centric decode loop.
+
+``run_synera`` and friends are thin wrappers over the server: with the
+default ``concurrency=1`` they reproduce the original strictly
+sequential semantics (identical token streams and per-stream
+timelines); with ``concurrency=N`` the scheduler genuinely packs verify
+chunks from multiple streams per iteration.  Token streams are real
+model outputs; only wall-clock is modeled (see serving/link.py).
 """
 from __future__ import annotations
 
@@ -30,59 +37,87 @@ class CloudClient:
         self.sched = scheduler
         self.sampling = sampling
         self.slot = None
-        self._req = 0
         self.last_fed_tokens = 0
         self.total_fed_tokens = 0   # generation-phase feeds only
         self.prefill_tokens = 0
 
-    def _next_req(self) -> int:
-        self._req += 1
-        return self._req
-
-    def _run_until(self, req_id: int, kind: str):
-        while True:
-            for ev in self.sched.run_iteration():
-                if ev.req_id == req_id and ev.kind == kind:
-                    return ev
-            if not self.sched.has_work():
-                raise RuntimeError("scheduler idle before completion")
-
-    # ------------------------------------------------------------------
-    def prefill(self, prompt: list[int], arrival_ms: float = 0.0):
-        rid = self._next_req()
-        t0 = self.sched.sim_ms
-        self.sched.submit_prefill(PrefillRequest(rid, np.asarray(prompt)))
-        ev = self._run_until(rid, "prefill_done")
-        self.slot = ev.slot
+    # -- non-blocking submission (SyneraServer event loop) -------------
+    def prefill_async(self, prompt: list[int], arrival_ms: float = 0.0) -> int:
+        """Queue the prompt prefill; returns the request id.  The slot is
+        assigned when the scheduler emits ``prefill_done`` (see
+        ``on_event``)."""
+        rid = self.sched.next_req_id()
+        self.sched.submit_prefill(PrefillRequest(
+            rid, np.asarray(prompt), arrival_ms=arrival_ms))
         # prompt prefill tracked separately from generation-phase feeds
         self.prefill_tokens = len(prompt)
-        return self.sched.sim_ms - t0
+        return rid
 
-    def frontier(self) -> int:
-        return int(self.sched.cloud_len[self.slot])
+    def verify_async(self, seq: list[int], draft: list[int], dists,
+                     arrival_ms: float = 0.0) -> int:
+        """Queue a verification request; returns the request id.
 
-    def verify(self, seq: list[int], draft: list[int], dists,
-               arrival_ms: float = 0.0) -> tuple[VerifyResult, float]:
-        """seq: the device's accepted stream (prompt + output).  Tokens
-        beyond the cloud's cached frontier are the uncached
+        ``seq`` is the device's accepted stream (prompt + output).
+        Tokens beyond the cloud's cached frontier are the uncached
         device-accepted tokens of the partial prefill (§3.4)."""
         uncached = np.asarray(seq[self.frontier():], np.int64)
         self.last_fed_tokens = len(uncached) + len(draft)
         self.total_fed_tokens += self.last_fed_tokens
-        rid = self._next_req()
-        t0 = self.sched.sim_ms
+        rid = self.sched.next_req_id()
         self.sched.submit_verify(VerifyRequest(
             rid, self.slot, uncached=uncached,
-            draft=np.asarray(draft, np.int64), q_sparse=[(d.idx, d.val)
-                                                         for d in dists],
-            sampling=self.sampling))
-        ev = self._run_until(rid, "verify_done")
-        return ev.result, self.sched.sim_ms - t0
+            draft=np.asarray(draft, np.int64),
+            q_sparse=[(d.idx, d.val) for d in dists],
+            sampling=self.sampling, arrival_ms=arrival_ms))
+        return rid
+
+    def on_event(self, ev) -> None:
+        """Apply a scheduler completion event for one of our requests."""
+        if ev.kind == "prefill_done":
+            self.slot = ev.slot
+
+    def frontier(self) -> int:
+        return int(self.sched.cloud_len[self.slot])
 
     def release(self):
         if self.slot is not None:
             self.sched.release_slot(self.slot)
             self.slot = None
+
+    # -- legacy blocking facade ----------------------------------------
+    def _run_until(self, req_id: int, kind: str):
+        while True:
+            t_before = self.sched.sim_ms
+            evs = self.sched.run_iteration()
+            for ev in evs:
+                if ev.req_id == req_id and ev.kind == kind:
+                    return ev
+            if not self.sched.has_work():
+                raise RuntimeError("scheduler idle before completion")
+            if not evs and self.sched.sim_ms == t_before:
+                # nothing executed, nothing to fast-forward to: only an
+                # external action (slot release) could unblock — a bare
+                # blocking client has none coming, so fail loudly
+                raise RuntimeError(
+                    "blocking CloudClient stalled (request blocked with "
+                    "no slot free and no other work); use SyneraServer "
+                    "for oversubscribed multi-stream serving")
+
+    def prefill(self, prompt: list[int], arrival_ms: float = 0.0):
+        rid = self.prefill_async(prompt, arrival_ms=arrival_ms)
+        t0 = self.sched.sim_ms
+        ev = self._run_until(rid, "prefill_done")
+        self.on_event(ev)
+        # elapsed from when the request could first be served: the clock
+        # may fast-forward to arrival_ms if the scheduler was idle
+        return self.sched.sim_ms - max(t0, arrival_ms)
+
+    def verify(self, seq: list[int], draft: list[int], dists,
+               arrival_ms: float = 0.0) -> tuple[VerifyResult, float]:
+        rid = self.verify_async(seq, draft, dists, arrival_ms=arrival_ms)
+        t0 = self.sched.sim_ms
+        ev = self._run_until(rid, "verify_done")
+        return ev.result, self.sched.sim_ms - max(t0, arrival_ms)
 
 
 # ---------------------------------------------------------------------------
@@ -119,17 +154,29 @@ def run_synera(device: DeviceRuntime, engine: CloudEngine,
                sampling: str = "greedy",
                cost_model: CostModel | None = None,
                profile_mode: bool = False,
-               chunk: int = 32) -> RunResult:
+               chunk: int = 32,
+               concurrency: int | None = 1,
+               arrivals: list[float] | None = None,
+               latency: CloudLatencyModel | None = None) -> RunResult:
+    """Serve ``prompts`` through the Synera pipeline.
+
+    ``concurrency=1`` (default) runs streams strictly one after another
+    (the original blocking semantics); ``concurrency=N`` (or ``None``
+    for unbounded) lets the SyneraServer event loop interleave up to N
+    device streams over the shared cloud engine, so verify iterations
+    pack chunks from multiple slots.  ``arrivals`` optionally gives each
+    stream an absolute arrival offset (ms) on the shared clock.
+    """
+    from repro.serving.server import SyneraServer
+    server = SyneraServer(device, engine, chunk=chunk, sampling=sampling,
+                          latency=latency)
+    metrics = server.serve(prompts, max_new, concurrency=concurrency,
+                           arrivals=arrivals, profile_mode=profile_mode)
     res = RunResult()
-    sched = VerificationAwareScheduler(engine, chunk=chunk)
-    for prompt in prompts:
-        client = CloudClient(sched, sampling=sampling)
-        m = device.generate(prompt, max_new, cloud=client,
-                            profile_mode=profile_mode)
-        m.n_cloud_fed_tokens = client.total_fed_tokens
+    for m in metrics:
         res.outputs.append(m.tokens)
         res.metrics.append(m)
-        client.release()
+    res.extras["scheduler"] = server.stats()
     return res.summarize(cost_model or CostModel())
 
 
@@ -153,6 +200,7 @@ def run_cloud_centric(engine: CloudEngine, prompts, max_new, *,
     res = RunResult()
     sched = VerificationAwareScheduler(engine,
                                        latency=latency or CloudLatencyModel())
+    B = engine.max_slots
     for prompt in prompts:
         client = CloudClient(sched, sampling=sampling)
         t0 = sched.sim_ms
@@ -161,18 +209,14 @@ def run_cloud_centric(engine: CloudEngine, prompts, max_new, *,
         out = []
         last = int(np.argmax(sched.last_row[slot]))
         out.append(last)
-        pos = len(prompt)
-        B = engine.max_slots
+        tokens = np.zeros((B, 1), np.int32)
+        positions = np.full((B, 1), -1, np.int32)
         while len(out) < max_new:
-            tokens = np.zeros((B, 1), np.int32)
-            positions = np.full((B, 1), -1, np.int32)
             tokens[slot, 0] = last
-            positions[slot, 0] = pos - 1 + 1  # feed `last` at its position
             positions[slot, 0] = len(prompt) + len(out) - 1
             logits = sched.decode_iteration(tokens, positions)
             last = int(np.argmax(logits[slot]))
             out.append(last)
-            pos += 1
         m = DeviceMetrics()
         m.tokens = out[:max_new]
         m.n_cloud_tokens = len(m.tokens)
@@ -190,7 +234,9 @@ def run_cloud_centric(engine: CloudEngine, prompts, max_new, *,
 
 
 def run_hybrid(device: DeviceRuntime, engine: CloudEngine, prompts, max_new,
-               *, cost_model=None, chunk: int = 32) -> RunResult:
+               *, cost_model=None, chunk: int = 32,
+               concurrency: int | None = 1,
+               arrivals: list[float] | None = None) -> RunResult:
     """Hybrid [9]: SLM-LLM token-level offloading by *confidence only*
     (no importance, no PI, no early exit)."""
     from repro.core.offload import OffloadPolicy
@@ -201,7 +247,8 @@ def run_hybrid(device: DeviceRuntime, engine: CloudEngine, prompts, max_new,
         use_early_exit=False, use_pi=False, alpha=device.alpha,
         wire_vocab=device.wire_vocab)
     return run_synera(dev, engine, prompts, max_new, cost_model=cost_model,
-                      chunk=chunk)
+                      chunk=chunk, concurrency=concurrency,
+                      arrivals=arrivals)
 
 
 def run_edgefm(device: DeviceRuntime, engine: CloudEngine, prompts, max_new,
@@ -213,7 +260,6 @@ def run_edgefm(device: DeviceRuntime, engine: CloudEngine, prompts, max_new,
     ppls = [device.perplexity(p) for p in prompts]
     thr = ppl_threshold or float(np.median(ppls))
     res = RunResult()
-    sched = VerificationAwareScheduler(engine)
     for prompt, ppl in zip(prompts, ppls):
         if ppl > thr:
             r = run_cloud_centric(engine, [prompt], max_new, link=link)
