@@ -100,3 +100,19 @@ def kernel_micro():
                      max_err=float(jnp.abs(y1 - y2).max()),
                      shape=f"B{B}xL{L}xH{H}xP{P}xN{N}"))
     return rows
+
+
+def main():
+    """CI smoke: every kernel must run (interpret mode) and match its
+    oracle — a cheap early-warning for Pallas dispatch regressions."""
+    import json
+    rows = kernel_micro()
+    print(json.dumps(rows, indent=2))
+    bad = [r for r in rows if not r["max_err"] < 5e-2]
+    if bad:
+        raise SystemExit(f"kernel error vs oracle too large: {bad}")
+    print(f"{len(rows)} kernels OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -66,8 +66,12 @@ def make_device(slm_cfg, slm_p, policy=None, **kw):
     return DeviceRuntime(slm_cfg, slm_p, policy=policy, **defaults)
 
 
-def make_engine(llm_cfg, llm_p, slots: int = 2):
-    return CloudEngine(llm_cfg, llm_p, max_slots=slots, s_max=S_MAX)
+def make_engine(llm_cfg, llm_p, slots: int = 2, attn_impl: str | None = None,
+                verify_top_k: int = 8):
+    cfg = llm_cfg if attn_impl is None else llm_cfg.replace(
+        attn_impl=attn_impl)
+    return CloudEngine(cfg, llm_p, max_slots=slots, s_max=S_MAX,
+                       verify_top_k=verify_top_k)
 
 
 def profile_pair(dev, eng, evalset, task):

@@ -31,26 +31,23 @@ from jax.experimental import pallas as pl
 NEG_INF = -1e30
 
 
-def _attn_imp_kernel(q_ref, k_ref, v_ref, o_ref, imp_ref, *,
-                     block_q: int, seq_q: int, seq_kv: int, causal: bool,
-                     q_offset: int, scale: float):
+def _attn_imp_kernel(q_ref, k_ref, v_ref, qp_ref, kp_ref, o_ref, imp_ref, *,
+                     causal: bool, scale: float):
     tb = pl.program_id(1)
 
     q = q_ref[0].astype(jnp.float32) * scale            # (block_q, hd)
     k = k_ref[0].astype(jnp.float32)                     # (S, hd)
     v = v_ref[0].astype(jnp.float32)                     # (S, hd)
+    q_pos = qp_ref[0]                                    # (block_q,) int32
+    kv_pos = kp_ref[0]                                   # (S,) int32
 
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (block_q, S)
 
-    q_pos = q_offset + tb * block_q + jax.lax.broadcasted_iota(
-        jnp.int32, (block_q, seq_kv), 0)
-    kv_pos = jax.lax.broadcasted_iota(jnp.int32, (block_q, seq_kv), 1)
-    valid = kv_pos < seq_kv
+    # positions are explicit arrays: -1 marks padded query rows and
+    # invalid (circular-cache) KV slots, exactly as in the XLA path
+    valid = (kv_pos[None, :] >= 0) & (q_pos[:, None] >= 0)
     if causal:
-        valid &= kv_pos <= q_pos
-    # rows past seq_q are padding; keep them numerically safe
-    valid &= (tb * block_q + jax.lax.broadcasted_iota(
-        jnp.int32, (block_q, seq_kv), 0)) < seq_q
+        valid &= kv_pos[None, :] <= q_pos[:, None]
     s = jnp.where(valid, s, NEG_INF)
 
     m = jnp.max(s, axis=1, keepdims=True)
@@ -72,9 +69,16 @@ def _attn_imp_kernel(q_ref, k_ref, v_ref, o_ref, imp_ref, *,
     imp_ref[0] += contrib.astype(imp_ref.dtype)
 
 
-def attn_with_importance(q, k, v, *, causal: bool = True, q_offset: int = 0,
+def attn_with_importance(q, k, v, q_pos=None, kv_pos=None, *,
+                         causal: bool = True, q_offset: int = 0,
                          block_q: int = 128, interpret: bool = True):
     """q: (B, Tq, nh, hd); k, v: (B, S, nkv, hd) with nh % nkv == 0.
+
+    ``q_pos`` (B, Tq) / ``kv_pos`` (B, S) are optional explicit position
+    arrays (-1 = padded query / invalid cache slot), so the kernel can
+    serve the serving path's circular cache from inside a jit.  When
+    omitted, contiguous positions starting at the static ``q_offset``
+    are assumed (the original interface).
 
     Returns (out (B, Tq, nh, hd), importance (B, nh, S)) — importance is
     the per-head column sum of the softmax matrix over the Tq query rows.
@@ -88,16 +92,24 @@ def attn_with_importance(q, k, v, *, causal: bool = True, q_offset: int = 0,
     n_qb = pl.cdiv(Tq, bq)
     pad_q = n_qb * bq - Tq
 
+    if q_pos is None:
+        q_pos = q_offset + jnp.broadcast_to(
+            jnp.arange(Tq, dtype=jnp.int32)[None], (B, Tq))
+    if kv_pos is None:
+        kv_pos = jnp.broadcast_to(
+            jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    q_pos = q_pos.astype(jnp.int32)
+    kv_pos = kv_pos.astype(jnp.int32)
+
     # (B*nh, Tq, hd) per-head layout
     qh = jnp.moveaxis(q, 2, 1).reshape(B * nh, Tq, hd)
     if pad_q:
         qh = jnp.pad(qh, ((0, 0), (0, pad_q), (0, 0)))
+        q_pos = jnp.pad(q_pos, ((0, 0), (0, pad_q)), constant_values=-1)
     kh = jnp.moveaxis(k, 2, 1).reshape(B * nkv, S, hd)
     vh = jnp.moveaxis(v, 2, 1).reshape(B * nkv, S, hd)
 
-    kernel = functools.partial(
-        _attn_imp_kernel, block_q=bq, seq_q=Tq, seq_kv=S, causal=causal,
-        q_offset=q_offset, scale=scale)
+    kernel = functools.partial(_attn_imp_kernel, causal=causal, scale=scale)
 
     out, imp = pl.pallas_call(
         kernel,
@@ -106,6 +118,8 @@ def attn_with_importance(q, k, v, *, causal: bool = True, q_offset: int = 0,
             pl.BlockSpec((1, bq, hd), lambda bh, tb: (bh, tb, 0)),
             pl.BlockSpec((1, S, hd), lambda bh, tb, g=g: (bh // g, 0, 0)),
             pl.BlockSpec((1, S, hd), lambda bh, tb, g=g: (bh // g, 0, 0)),
+            pl.BlockSpec((1, bq), lambda bh, tb, nh=nh: (bh // nh, tb)),
+            pl.BlockSpec((1, S), lambda bh, tb, nh=nh: (bh // nh, 0)),
         ],
         out_specs=[
             pl.BlockSpec((1, bq, hd), lambda bh, tb: (bh, tb, 0)),
@@ -116,7 +130,7 @@ def attn_with_importance(q, k, v, *, causal: bool = True, q_offset: int = 0,
             jax.ShapeDtypeStruct((B * nh, S), jnp.float32),
         ],
         interpret=interpret,
-    )(qh, kh, vh)
+    )(qh, kh, vh, q_pos, kv_pos)
 
     out = out[:, :Tq].reshape(B, nh, Tq, hd)
     out = jnp.moveaxis(out, 1, 2)

@@ -38,6 +38,16 @@ def main():
     ap.add_argument("--arrival-rate", type=float, default=0.0,
                     help="Poisson arrivals in requests/s of simulated "
                          "time (0 = arrive at admission)")
+    ap.add_argument("--attn-impl", default=None,
+                    choices=["naive", "blocked", "pallas"],
+                    help="cloud+device attention implementation; "
+                         "'pallas' dispatches the repro/kernels TPU "
+                         "kernels (decode_gqa / partial_prefill / "
+                         "attn_importance; interpret mode off-TPU)")
+    ap.add_argument("--verify-top-k", type=int, default=8,
+                    help="top-k sampling support the fused verification "
+                         "epilogue keeps device-side per row (the only "
+                         "distribution state that crosses to the host)")
     ap.add_argument("--json", action="store_true")
     args = ap.parse_args()
     if args.concurrency < 0:
@@ -50,10 +60,14 @@ def main():
     from repro.serving.link import LinkModel
 
     slm_cfg, slm_p, llm_cfg, llm_p, task = get_pair()
+    if args.attn_impl is not None:
+        slm_cfg = slm_cfg.replace(attn_impl=args.attn_impl)
     evalset = PC.eval_set(task, args.requests, seed=args.seed + 7)
     prompts = [p for p, _ in evalset]
     link = LinkModel(bandwidth_mbps=args.bandwidth_mbps)
-    eng = PC.make_engine(llm_cfg, llm_p, slots=args.slots)
+    eng = PC.make_engine(llm_cfg, llm_p, slots=args.slots,
+                         attn_impl=args.attn_impl,
+                         verify_top_k=args.verify_top_k)
     concurrency = None if args.concurrency == 0 else args.concurrency
     arrivals = None
     if args.arrival_rate > 0:
@@ -107,6 +121,9 @@ def main():
             verify_occupancy=sched["mean_verify_occupancy"],
             packed_tokens=sched["mean_packed_tokens"],
             iterations=sched["iterations"])
+    summary.update(
+        engine_host_bytes=eng.bytes_to_host,
+        engine_specializations=eng.compile_stats["n_specializations"])
     if args.json:
         print(json.dumps(summary))
     else:

@@ -5,7 +5,7 @@ dicts of jnp arrays).  Layer stacks are consumed via ``lax.scan`` over
 stacked parameters (see model.py), so each function here must be
 shape-polymorphic in the batch/sequence dims but static in config.
 
-Attention exists in two implementations (a hillclimb lever, see
+Attention exists in three implementations (a hillclimb lever, see
 EXPERIMENTS.md §Perf):
   * ``naive``   -- materializes softmax(QK^T); required when the caller
                    wants the paper's *importance score* (column sums of the
@@ -14,7 +14,13 @@ EXPERIMENTS.md §Perf):
                    (short contexts) and as the paper-faithful baseline.
   * ``blocked`` -- online-softmax scan over KV blocks (flash pattern at
                    the HLO level): O(block) memory, the optimized cloud
-                   path.  The Pallas kernels in repro/kernels mirror both.
+                   path on any backend.
+  * ``pallas``  -- the hand-written TPU kernels in repro/kernels:
+                   ``decode_gqa`` for T==1 cached decode,
+                   ``partial_prefill`` for chunked verification, and
+                   ``attn_importance`` for the device draft path
+                   (interpret-mode fallback off-TPU; non-causal shapes
+                   fall back to ``blocked``).
 """
 from __future__ import annotations
 
@@ -185,9 +191,62 @@ def blocked_attention(q, k, v, q_pos, kv_pos, *, block_kv: int = 1024,
     return out.astype(q.dtype)
 
 
+def _pallas_interpret() -> bool:
+    """Pallas kernels compile natively on TPU; everywhere else they run
+    in interpret mode (structural validation on CPU CI)."""
+    return jax.default_backend() != "tpu"
+
+
+def pallas_attention(q, k, v, q_pos, kv_pos, *, block_kv: int = 1024,
+                     window: int = 0, causal: bool = True,
+                     return_importance: bool = False):
+    """Dispatch to the repro/kernels Pallas kernels (cfg.attn_impl ==
+    "pallas"):
+
+    * ``attn_importance``  -- importance extraction fused into attention
+      (device SLM draft path; whole KV VMEM-resident, window unsupported)
+    * ``decode_gqa``       -- T == 1 cached decode (KV streamed per group)
+    * ``partial_prefill``  -- chunked verification over a cached prefix
+
+    Falls back to the XLA paths for shapes the kernels don't cover
+    (non-causal cross attention; windowed importance).
+    """
+    # deferred imports: kernels are an optional acceleration layer and
+    # must not be imported for the default XLA-only configs
+    from repro.kernels.attn_importance.attn_importance import (
+        attn_with_importance)
+    from repro.kernels.decode_gqa.decode_gqa import decode_attention
+    from repro.kernels.partial_prefill.partial_prefill import (
+        partial_prefill_attention)
+
+    interpret = _pallas_interpret()
+    q_pos = q_pos.astype(jnp.int32)
+    kv_pos = kv_pos.astype(jnp.int32)
+    if return_importance:
+        if window:
+            return naive_attention(q, k, v, q_pos, kv_pos, window=window,
+                                   causal=causal, return_importance=True)
+        out, imp = attn_with_importance(q, k, v, q_pos, kv_pos,
+                                        causal=causal, interpret=interpret)
+        # paper importance (§3.2): head mean of per-head column sums
+        return out, imp.mean(axis=1)
+    if q.shape[1] == 1:
+        out = decode_attention(q[:, 0], k, v, q_pos[:, 0], kv_pos,
+                               window=window, block_kv=block_kv,
+                               interpret=interpret)
+        return out[:, None], None
+    out = partial_prefill_attention(q, k, v, q_pos, kv_pos, window=window,
+                                    block_kv=block_kv, interpret=interpret)
+    return out, None
+
+
 def attention(q, k, v, q_pos, kv_pos, *, impl: str = "blocked",
               block_kv: int = 1024, window: int = 0, causal: bool = True,
               return_importance: bool = False):
+    if impl == "pallas" and causal:
+        return pallas_attention(q, k, v, q_pos, kv_pos, block_kv=block_kv,
+                                window=window, causal=causal,
+                                return_importance=return_importance)
     if return_importance or impl == "naive":
         return naive_attention(q, k, v, q_pos, kv_pos, window=window,
                                causal=causal,

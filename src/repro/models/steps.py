@@ -100,6 +100,11 @@ def make_verify_step(cfg, *, window: int = 0):
 
     tokens: (B, C) chunk; pos: (B, C) absolute positions (contiguous,
     starting at each request's cached length).
+
+    This is the *legacy/debug* step: it hands the full (B, C, V) logits
+    to the host.  The serving hot path uses
+    :func:`make_cloud_verify_step`, whose fused epilogue keeps the
+    full-vocab tensor device-resident.
     """
 
     def verify(params, cache, tokens, pos):
@@ -110,13 +115,119 @@ def make_verify_step(cfg, *, window: int = 0):
     return verify
 
 
+def fused_verify_epilogue(logits, targets, sel_idx, top_k: int,
+                          with_dists: bool = True):
+    """Device-resident verification epilogue (the hot-path contract).
+
+    logits: (B, C, V); targets: (B, C) int32 token ids whose probability
+    the verifier needs (-1 = no target, e.g. the bonus row);
+    sel_idx: (B, R) int32 local row indices of the rows the verifier
+    will actually consume (the last gamma+1 rows of each request; -1 =
+    unused).  R << C, so every vocab-sized reduction touches only the
+    selected rows — the chunk's full (B, C, V) logits are consumed by
+    nothing but the row gather.
+
+    Returns ``(token_id, p_target, topk_idx, topk_val)`` — the only
+    verification state that ever crosses to the host:
+
+    * ``token_id`` (B, R)   -- selected rows' argmax (greedy verification)
+    * ``p_target`` (B, R)   -- softmax probability of the selected rows'
+      targets (the stochastic accept test of Leviathan verification),
+      exact via logsumexp — no full softmax is materialized
+    * ``topk_idx/val`` (B, R, K) -- top-k of the selected rows' softmax:
+      the cloud's sampling support, used for the rejection-resample
+      residual and the bonus token.  Exact when top_k >= vocab;
+      otherwise the cloud samples top-k (the same support-compression
+      argument as the §4.2 uplink).
+
+    Greedy verification consumes only ``token_id``; pass
+    ``with_dists=False`` to skip the probability work entirely (the
+    p/top-k outputs come back as zeros) — the scheduler selects the
+    variant per iteration from the batched requests' sampling modes.
+    """
+    B = logits.shape[0]
+    R = sel_idx.shape[1]
+    lf = logits.astype(jnp.float32)
+    selc = jnp.clip(sel_idx, 0, lf.shape[1] - 1).astype(jnp.int32)
+    rows = jnp.take_along_axis(lf, selc[..., None], axis=1)       # (B, R, V)
+    token_id = jnp.argmax(rows, axis=-1).astype(jnp.int32)        # (B, R)
+    if not with_dists:
+        return (token_id, jnp.zeros((B, R), jnp.float32),
+                jnp.zeros((B, R, top_k), jnp.int32),
+                jnp.zeros((B, R, top_k), jnp.float32))
+    tsel = jnp.take_along_axis(targets, selc, axis=1)             # (B, R)
+    lse = jax.scipy.special.logsumexp(rows, axis=-1)              # (B, R)
+    tgt = jnp.clip(tsel, 0, lf.shape[-1] - 1).astype(jnp.int32)
+    p_t = jnp.exp(jnp.take_along_axis(rows, tgt[..., None], axis=-1)[..., 0]
+                  - lse)
+    p_t = jnp.where((tsel >= 0) & (sel_idx >= 0), p_t, 0.0)
+    # top-k on logits == top-k on probs (softmax is monotone)
+    tkl, topk_idx = jax.lax.top_k(rows, top_k)
+    topk_val = jnp.exp(tkl - lse[..., None])
+    return token_id, p_t, topk_idx.astype(jnp.int32), topk_val
+
+
+def make_cloud_verify_step(cfg, *, window: int = 0, top_k: int = 8,
+                           with_dists: bool = True):
+    """Fused serving step: partial-prefill forward + on-device
+    verification epilogue + last-valid-row gather.
+
+    (params, cache, tokens (B,C), pos (B,C), targets (B,C),
+     sel_idx (B,R), last_local (B,)) ->
+        ((token_id (B,R), p_target (B,R), topk_idx (B,R,K),
+          topk_val (B,R,K), last_row (B,V)), cache)
+
+    ``with_dists=False`` compiles the greedy-only variant (argmax rows,
+    no probability work).  ``last_local`` indexes each slot's last valid
+    row within the chunk; the gathered full-vocab row backs prefill
+    completions (the sampling verifier's pre-draft row) — callers only
+    fetch it on prefill iterations, so verify iterations never move a
+    vocab-sized tensor to the host.
+    """
+
+    def step(params, cache, tokens, pos, targets, sel_idx, last_local):
+        logits, cache, _, _ = M.forward(cfg, params, tokens, pos, cache=cache,
+                                        window=window)
+        tok, p_t, tk_i, tk_v = fused_verify_epilogue(
+            logits, targets, sel_idx, top_k, with_dists=with_dists)
+        last = jnp.take_along_axis(
+            logits, last_local[:, None, None].astype(jnp.int32), axis=1)[:, 0]
+        return (tok, p_t, tk_i, tk_v, last.astype(jnp.float32)), cache
+
+    return step
+
+
+def make_cloud_decode_step(cfg, *, window: int = 0, top_k: int = 8):
+    """Fused decode step: one token per slot, returns only the argmax id
+    and the top-k sampling support (never the (B, V) logits).
+
+    (params, cache, token (B,1), pos (B,1)) ->
+        ((token_id (B,), topk_idx (B,K), topk_val (B,K)), cache)
+    """
+
+    def step(params, cache, token, pos):
+        logits, cache, _, _ = M.forward(cfg, params, token, pos, cache=cache,
+                                        window=window)
+        row = logits[:, -1].astype(jnp.float32)
+        tok = jnp.argmax(row, axis=-1).astype(jnp.int32)
+        # top-k on logits == top-k on probs; normalize the K kept values
+        # via logsumexp instead of materializing the full softmax
+        tkl, tk_i = jax.lax.top_k(row, top_k)
+        lse = jax.scipy.special.logsumexp(row, axis=-1)
+        tk_v = jnp.exp(tkl - lse[..., None])
+        return (tok, tk_i.astype(jnp.int32), tk_v), cache
+
+    return step
+
+
 def make_device_draft_step(cfg):
     """Device-side SLM forward for a draft chunk: returns logits,
     updated cache, and the paper's importance scores (column sums of the
-    attention matrix over the cache).  Uses the naive attention path
-    because importance requires materializing the matrix (or the fused
-    Pallas kernel on TPU)."""
-    dev_cfg = cfg.replace(attn_impl="naive")
+    attention matrix over the cache).  Importance requires materializing
+    the matrix, so the implementation is either the naive path or the
+    fused attn_importance Pallas kernel (``attn_impl="pallas"``)."""
+    dev_cfg = cfg if cfg.attn_impl == "pallas" else cfg.replace(
+        attn_impl="naive")
 
     def draft(params, cache, tokens, pos):
         logits, cache, imp, _ = M.forward(dev_cfg, params, tokens, pos,

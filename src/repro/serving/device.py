@@ -156,7 +156,10 @@ class DeviceRuntime:
                  use_compression: bool = True, alpha: float = 0.7,
                  wire_vocab: int = 0):
         assert cfg.family == "dense", "device SLM must be a dense decoder"
-        self.cfg = cfg.replace(attn_impl="naive", remat=False)
+        # importance extraction needs the attention matrix (naive) or the
+        # fused attn_importance Pallas kernel; anything else maps to naive
+        impl = "pallas" if cfg.attn_impl == "pallas" else "naive"
+        self.cfg = cfg.replace(attn_impl=impl, remat=False)
         self.params = params
         self.s_max = s_max
         self.gamma = gamma

@@ -3,16 +3,42 @@ jit-compiled steps (the TPU-idiomatic equivalent of vLLM's engine; see
 DESIGN.md §2).
 
 The engine is *mechanism only*: it owns the KV/SSM cache pytree and
-exposes fixed-shape ``feed`` (chunked partial prefill over any slots) and
-``decode`` steps.  All batching *policy* lives in
+exposes fixed-shape ``feed`` (chunked partial prefill over any slots),
+``prefill`` and ``decode`` steps.  All batching *policy* lives in
 ``serving/scheduler.py`` (Algorithm 1 of the paper).
+
+Device-residency contract (the serving hot path, docs/serving_api.md):
+
+* Full-vocab logits NEVER leave the device on verify/decode iterations.
+  The jitted steps carry a fused verification epilogue
+  (models/steps.fused_verify_epilogue) that reduces each row to its
+  argmax id, the gathered probability of the known next token, and a
+  top-k compressed sampling support — ``feed`` returns (slots, chunk)
+  ids plus (slots, chunk, K) sparse rows, ``decode`` returns (slots,)
+  ids plus (slots, K) rows.
+* ``prefill`` additionally fetches ONE full-vocab row per slot (the
+  last prompt position, gathered on device), which seeds the sampling
+  verifier's pre-draft row; this is per-prefill, not per-iteration.
+* The cache pytree is donated to every step (``donate_argnums``), so
+  feed/decode/verify update it in place on backends that support
+  donation, and ``reset_slot`` is a single jitted slot-masked update
+  (one dispatch) instead of a host tree walk.
+* ``feed_logits`` / ``decode_logits`` are the legacy/debug path that
+  does round-trip the full (slots, chunk, V) tensor — kept for
+  before/after benchmarking (benchmarks/hotpath_bench.py) and the
+  fused-vs-host-numpy identity tests.
 
 Ragged per-slot chunks are padded to the iteration width; padded entries
 carry position -1, which ``cache_write`` drops (never pollutes the
-cache).  Chunk widths are bucketed to powers of two to bound jit
-re-specialization.
+cache).  Chunk widths snap to a small fixed bucket ladder so jit
+re-specialization is bounded by ``len(feed_buckets)`` (wider inputs are
+fed through multiple max-bucket chunks); ``compile_stats`` reports the
+specializations actually taken.
 """
 from __future__ import annotations
+
+import warnings
+from dataclasses import dataclass
 
 import numpy as np
 
@@ -20,78 +46,310 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import model as M
-from repro.models.steps import make_decode_step, make_verify_step
+from repro.models.steps import (make_cloud_decode_step, make_cloud_verify_step,
+                                make_decode_step, make_verify_step)
+
+DEFAULT_FEED_BUCKETS = (8, 16, 32, 64, 128, 256)
 
 
-def _bucket(n: int, lo: int = 8) -> int:
-    b = lo
-    while b < n:
-        b *= 2
-    return b
+def _call_donated(fn, *args):
+    """Invoke a donated jitted step.  CPU (and some other backends)
+    silently ignore buffer donation; the per-compilation warning is not
+    actionable here, and the suppression stays scoped to this call so
+    the process-global warning state is untouched."""
+    with warnings.catch_warnings():
+        warnings.filterwarnings(
+            "ignore", message="Some donated buffers were not usable")
+        return fn(*args)
+
+
+@dataclass(frozen=True)
+class VerifyRows:
+    """Fused verification state for one feed (host-resident).
+
+    All arrays are indexed by the caller's ``sel_idx`` selection plane
+    (R = verify_rows_max): entry r of slot b describes the chunk row
+    ``sel_idx[b, r]``.
+
+    token_id: (slots, R) int32  -- argmax over the vocab
+    p_draft:  (slots, R) f32    -- softmax prob of the row's target token
+    topk_idx: (slots, R, K) int32
+    topk_val: (slots, R, K) f32 -- top-k sampling support of the row
+    """
+    token_id: np.ndarray
+    p_draft: np.ndarray
+    topk_idx: np.ndarray
+    topk_val: np.ndarray
+
+    @property
+    def nbytes(self) -> int:
+        return (self.token_id.nbytes + self.p_draft.nbytes
+                + self.topk_idx.nbytes + self.topk_val.nbytes)
+
+
+@dataclass(frozen=True)
+class DecodeRows:
+    """Fused per-slot decode result: argmax id + top-k sampling support."""
+    token_id: np.ndarray          # (slots,) int32
+    topk_idx: np.ndarray          # (slots, K) int32
+    topk_val: np.ndarray          # (slots, K) f32
+
+    @property
+    def nbytes(self) -> int:
+        return (self.token_id.nbytes + self.topk_idx.nbytes
+                + self.topk_val.nbytes)
+
+
+def _reset_cache_slot(cache, slot):
+    """Slot-masked cache invalidation: positions -> -1 (stale K/V at
+    invalid positions is never attended to), SSM/conv states -> 0.
+    ``slot`` is a traced scalar, so one compiled program serves every
+    slot."""
+
+    def walk(c):
+        out = {}
+        for k, v in c.items():
+            if isinstance(v, dict):
+                out[k] = walk(v)
+            elif k == "pos":                       # (..., B, S)
+                out[k] = v.at[..., slot, :].set(-1)
+            elif k == "state":                     # (..., B, H, P, N)
+                out[k] = v.at[..., slot, :, :, :].set(0)
+            elif k == "conv":                      # (..., B, W-1, C)
+                out[k] = v.at[..., slot, :, :].set(0)
+            else:                                  # k/v buffers: stale ok
+                out[k] = v
+        return out
+
+    return walk(cache)
 
 
 class CloudEngine:
     """Fixed-slot serving engine for one model."""
 
     def __init__(self, cfg, params, *, max_slots: int = 8, s_max: int = 2048,
-                 window: int = 0):
+                 window: int = 0, verify_top_k: int = 8,
+                 verify_rows_max: int = 8,
+                 feed_buckets: tuple = DEFAULT_FEED_BUCKETS):
         self.cfg = cfg
         self.params = params
         self.max_slots = max_slots
         self.s_max = s_max
         self.window = window
-        self.cache = M.init_cache(cfg, max_slots, s_max)
-        self._verify = jax.jit(make_verify_step(cfg, window=window))
-        self._decode = jax.jit(make_decode_step(cfg, window=window))
         self.vocab = cfg.vocab
+        self.verify_top_k = max(1, min(verify_top_k, cfg.vocab))
+        # vocab-sized epilogue reductions run on at most this many
+        # selected rows per slot per iteration (>= gamma + 1)
+        self.verify_rows_max = verify_rows_max
+        self.feed_buckets = tuple(sorted(feed_buckets))
+        self.cache = M.init_cache(cfg, max_slots, s_max)
+        self._step = jax.jit(
+            make_cloud_verify_step(cfg, window=window,
+                                   top_k=self.verify_top_k),
+            donate_argnums=1)
+        # greedy-only iterations skip the probability epilogue entirely
+        self._step_greedy = jax.jit(
+            make_cloud_verify_step(cfg, window=window,
+                                   top_k=self.verify_top_k,
+                                   with_dists=False),
+            donate_argnums=1)
+        self._decode = jax.jit(
+            make_cloud_decode_step(cfg, window=window,
+                                   top_k=self.verify_top_k),
+            donate_argnums=1)
+        # legacy/debug full-logits path (bench + identity tests)
+        self._raw_verify = jax.jit(make_verify_step(cfg, window=window),
+                                   donate_argnums=1)
+        self._raw_decode = jax.jit(make_decode_step(cfg, window=window),
+                                   donate_argnums=1)
+        self._reset = jax.jit(_reset_cache_slot, donate_argnums=0)
+        # telemetry: host transfer + jit specialization accounting
+        self.bytes_to_host = 0
+        self._calls = {"feed": 0, "prefill": 0, "decode": 0,
+                       "feed_logits": 0, "decode_logits": 0}
+        self._specializations: set = set()
 
+    # -- telemetry ------------------------------------------------------
+    @property
+    def compile_stats(self) -> dict:
+        """Which (step, bucket) jit specializations this engine took, and
+        how often each entry point ran — the bench asserts the bucket
+        ladder bounds re-specialization."""
+        return dict(
+            calls=dict(self._calls),
+            buckets=sorted({b for kind, b in self._specializations
+                            if kind in ("fused", "fused_greedy")}),
+            specializations=sorted(self._specializations),
+            n_specializations=len(self._specializations),
+            bytes_to_host=self.bytes_to_host,
+        )
+
+    # -- cache management ----------------------------------------------
     def reset_slot(self, slot: int):
-        """Invalidate a slot's cache: positions -> -1 (stale K/V at invalid
-        positions is never attended to), SSM/conv states -> 0."""
+        """Invalidate a slot's cache in one jitted, donated dispatch."""
+        self.cache = _call_donated(self._reset, self.cache, jnp.int32(slot))
 
-        def tree_invalidate(c):
-            if not isinstance(c, dict):
-                return c
-            out = {}
-            for k, v in c.items():
-                if isinstance(v, dict):
-                    out[k] = tree_invalidate(v)
-                elif k == "pos":                       # (..., B, S)
-                    out[k] = v.at[..., slot, :].set(-1)
-                elif k == "state":                     # (..., B, H, P, N)
-                    out[k] = v.at[..., slot, :, :, :].set(0)
-                elif k == "conv":                      # (..., B, W-1, C)
-                    out[k] = v.at[..., slot, :, :].set(0)
-                else:                                  # k/v buffers: stale ok
-                    out[k] = v
-            return out
+    # -- bucketing ------------------------------------------------------
+    def _bucket_of(self, n: int) -> int:
+        for b in self.feed_buckets:
+            if n <= b:
+                return b
+        return self.feed_buckets[-1]
 
-        self.cache = tree_invalidate(self.cache)
+    def _chunks(self, C: int):
+        """Split a width-C feed into ladder-bounded sub-chunks."""
+        cap = self.feed_buckets[-1]
+        off = 0
+        while off < C:
+            yield off, min(cap, C - off)
+            off += cap
+
+    @staticmethod
+    def _pad(arr, width, fill):
+        pad = width - arr.shape[1]
+        if pad <= 0:
+            return arr
+        return np.pad(arr, ((0, 0), (0, pad)), constant_values=fill)
+
+    def _run_fused(self, tokens, positions, targets, sel_idx, last_local,
+                   with_dists=True):
+        """One fused sub-chunk; returns lazy (device) outputs.  Callers
+        convert only what they need."""
+        C = tokens.shape[1]
+        Cb = self._bucket_of(C)
+        self._specializations.add(
+            ("fused" if with_dists else "fused_greedy", Cb))
+        step = self._step if with_dists else self._step_greedy
+        out, self.cache = _call_donated(
+            step, self.params, self.cache,
+            jnp.asarray(self._pad(tokens, Cb, 0), jnp.int32),
+            jnp.asarray(self._pad(positions, Cb, -1), jnp.int32),
+            jnp.asarray(self._pad(targets, Cb, -1), jnp.int32),
+            jnp.asarray(sel_idx, jnp.int32),
+            jnp.asarray(last_local, jnp.int32))
+        return out
 
     # ------------------------------------------------------------------
-    def feed(self, tokens: np.ndarray, positions: np.ndarray) -> np.ndarray:
-        """Chunked (partial) prefill over all slots.
+    def feed(self, tokens: np.ndarray, positions: np.ndarray,
+             targets: np.ndarray | None = None,
+             sel_idx: np.ndarray | None = None,
+             need_dists: bool = True) -> VerifyRows:
+        """Chunked (partial) prefill over all slots, fused epilogue.
 
         tokens, positions: (max_slots, C) int32; positions == -1 marks
-        padding/idle.  Returns logits (max_slots, C, V) as numpy.
+        padding/idle.  ``targets`` (max_slots, C) carries, per row, the
+        token id whose probability the verifier will test (-1 = none);
+        ``sel_idx`` (max_slots, R) the local indices of the rows whose
+        p/top-k state the verifier will consume.  ``need_dists=False``
+        (iterations whose batched requests are all greedy) selects the
+        argmax-only step variant.  Only the fused rows cross to the host.
         """
-        C = tokens.shape[1]
-        Cb = _bucket(C)
-        if Cb != C:
-            pad = Cb - C
-            tokens = np.pad(tokens, ((0, 0), (0, pad)))
-            positions = np.pad(positions, ((0, 0), (0, pad)),
-                               constant_values=-1)
-        logits, self.cache = self._verify(
-            self.params, self.cache,
-            jnp.asarray(tokens, jnp.int32), jnp.asarray(positions, jnp.int32))
-        return np.asarray(logits[:, :C], np.float32)
+        self._calls["feed"] += 1
+        B, C = tokens.shape
+        R = self.verify_rows_max
+        if targets is None:
+            targets = np.full((B, C), -1, np.int32)
+        if sel_idx is None:
+            sel_idx = np.full((B, R), -1, np.int32)
+        zeros = np.zeros(B, np.int32)
+        tok_acc = np.zeros((B, R), np.int32)
+        p_acc = np.zeros((B, R), np.float32)
+        ki_acc = np.zeros((B, R, self.verify_top_k), np.int32)
+        kv_acc = np.zeros((B, R, self.verify_top_k), np.float32)
+        moved_bytes = 0
+        for off, w in self._chunks(C):
+            sl = slice(off, off + w)
+            in_chunk = (sel_idx >= off) & (sel_idx < off + w)
+            sub_sel = np.where(in_chunk, sel_idx - off, -1).astype(np.int32)
+            res = self._run_fused(tokens[:, sl], positions[:, sl],
+                                  targets[:, sl], sub_sel, zeros,
+                                  with_dists=need_dists)
+            if in_chunk.any():      # only selected rows cross to the host
+                tok = np.asarray(res[0], np.int32)
+                tok_acc = np.where(in_chunk, tok, tok_acc)
+                moved_bytes += tok.nbytes
+                if need_dists:
+                    p_acc = np.where(in_chunk, np.asarray(res[1], np.float32),
+                                     p_acc)
+                    ki_acc = np.where(in_chunk[..., None],
+                                      np.asarray(res[2], np.int32), ki_acc)
+                    kv_acc = np.where(in_chunk[..., None],
+                                      np.asarray(res[3], np.float32), kv_acc)
+                    moved_bytes += (p_acc.nbytes + ki_acc.nbytes
+                                    + kv_acc.nbytes)
+        self.bytes_to_host += moved_bytes
+        return VerifyRows(token_id=tok_acc, p_draft=p_acc,
+                          topk_idx=ki_acc, topk_val=kv_acc)
 
-    def decode(self, tokens: np.ndarray, positions: np.ndarray) -> np.ndarray:
+    def prefill(self, tokens: np.ndarray, positions: np.ndarray) -> np.ndarray:
+        """Prompt prefill over all slots.  Returns each slot's LAST valid
+        row's full logits (max_slots, V) — gathered on device, one
+        vocab-row per slot — and writes the cache.  Slots with no valid
+        positions return zeros."""
+        self._calls["prefill"] += 1
+        B, C = tokens.shape
+        counts = (positions >= 0).sum(axis=1)
+        targets = np.full((B, C), -1, np.int32)
+        no_sel = np.full((B, self.verify_rows_max), -1, np.int32)
+        out = np.zeros((B, self.vocab), np.float32)
+        for off, w in self._chunks(C):
+            sl = slice(off, off + w)
+            local = np.clip(counts - 1 - off, 0, w - 1).astype(np.int32)
+            # only the last-row gather is consumed: the argmax-only step
+            # variant suffices (no extra specialization, no wasted top-k)
+            res = self._run_fused(tokens[:, sl], positions[:, sl],
+                                  targets[:, sl], no_sel, local,
+                                  with_dists=False)
+            sel = (counts > 0) & (counts - 1 >= off) & (counts - 1 < off + w)
+            if sel.any():
+                last = np.asarray(res[4], np.float32)
+                out[sel] = last[sel]
+                self.bytes_to_host += last.nbytes
+        return out
+
+    def decode(self, tokens: np.ndarray, positions: np.ndarray) -> DecodeRows:
         """One decode step for all slots. tokens/positions: (max_slots, 1).
 
-        Returns last-token logits (max_slots, V)."""
-        logits, self.cache = self._decode(
-            self.params, self.cache,
+        Returns fused last-token rows (argmax + top-k support)."""
+        self._calls["decode"] += 1
+        self._specializations.add(("decode", 1))
+        (tok, tk_i, tk_v), self.cache = _call_donated(
+            self._decode, self.params, self.cache,
             jnp.asarray(tokens, jnp.int32), jnp.asarray(positions, jnp.int32))
-        return np.asarray(logits, np.float32)
+        rows = DecodeRows(token_id=np.asarray(tok, np.int32),
+                          topk_idx=np.asarray(tk_i, np.int32),
+                          topk_val=np.asarray(tk_v, np.float32))
+        self.bytes_to_host += rows.nbytes
+        return rows
+
+    # -- legacy/debug full-logits path ---------------------------------
+    def feed_logits(self, tokens: np.ndarray,
+                    positions: np.ndarray) -> np.ndarray:
+        """Pre-fusion semantics: round-trip the full (max_slots, C, V)
+        logits as host float32.  Bench baseline + identity tests."""
+        self._calls["feed_logits"] += 1
+        parts = []
+        for off, w in self._chunks(tokens.shape[1]):
+            sl = slice(off, off + w)
+            Cb = self._bucket_of(w)
+            self._specializations.add(("raw", Cb))
+            logits, self.cache = _call_donated(
+                self._raw_verify, self.params, self.cache,
+                jnp.asarray(self._pad(tokens[:, sl], Cb, 0), jnp.int32),
+                jnp.asarray(self._pad(positions[:, sl], Cb, -1), jnp.int32))
+            parts.append(np.asarray(logits[:, :w], np.float32))
+        out = np.concatenate(parts, axis=1)
+        self.bytes_to_host += out.nbytes
+        return out
+
+    def decode_logits(self, tokens: np.ndarray,
+                      positions: np.ndarray) -> np.ndarray:
+        """Pre-fusion decode: full last-token logits (max_slots, V)."""
+        self._calls["decode_logits"] += 1
+        self._specializations.add(("raw_decode", 1))
+        logits, self.cache = _call_donated(
+            self._raw_decode, self.params, self.cache,
+            jnp.asarray(tokens, jnp.int32), jnp.asarray(positions, jnp.int32))
+        out = np.asarray(logits, np.float32)
+        self.bytes_to_host += out.nbytes
+        return out

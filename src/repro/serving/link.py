@@ -70,17 +70,31 @@ class CloudLatencyModel:
 
     ms_base calibrated to a 13B bf16 verifier on A6000: the decode/verify
     iteration floor is the weight stream (~26 GB / ~650 GB/s ~ 40 ms),
-    amortized across the batched slots of one iteration."""
+    amortized across the batched slots of one iteration.
+
+    ``host_link_gbps`` models the accelerator->host interconnect the
+    scheduler's verifier state crosses every iteration (PCIe-class, GB/s;
+    effective D2H with sync overheads).  The CPU container aliases
+    device/host memory (np.asarray is zero-copy), so this term is what
+    makes the engine's measured ``bytes_to_host`` show up in modeled
+    serving time the way it would on real hardware — the pre-change
+    full-vocab logits round trip (e.g. 8 slots x 32 chunk x 128k vocab
+    x 4B = 128 MiB/iter) costs ~21 ms here, the fused rows microseconds.
+    """
     ms_base: float = 40.0               # per-iteration fixed cost
     ms_per_token: float = 0.12          # per (token x slot) in the batch
     ms_scheduler: float = 0.5           # verification-aware scheduling overhead
     prefill_ms_per_token: float = 0.25
+    host_link_gbps: float = 6.0         # effective D2H bandwidth (GB/s)
 
     def iteration_ms(self, total_tokens: int) -> float:
         return self.ms_base + self.ms_scheduler + total_tokens * self.ms_per_token
 
     def prefill_ms(self, total_tokens: int) -> float:
         return self.ms_base + total_tokens * self.prefill_ms_per_token
+
+    def host_transfer_ms(self, nbytes: int) -> float:
+        return nbytes / (self.host_link_gbps * 1e9) * 1e3
 
 
 @dataclass

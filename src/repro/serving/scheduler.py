@@ -16,8 +16,18 @@ Batching policy over the CloudEngine:
   most one chunk per slot but chunks from *many* slots — this is where
   multi-tenant batching happens.
 * When a request's last chunk completes, the draft tokens are verified
-  ("draft & verify") from the collected logits rows and the result is
-  emitted.
+  ("draft & verify") and the result is emitted.
+
+Device residency (the perf contract, docs/serving_api.md): by default
+(``fused=True``) the scheduler consumes the engine's fused rows —
+per-row argmax ids, the gathered probability of each known next token
+(the scheduler passes a ``targets`` plane alongside tokens/positions),
+and top-k compressed sampling support — so no full-vocab tensor crosses
+the host boundary per verify iteration and requests retain only O(gamma
+* K) host state.  ``fused=False`` keeps the pre-fusion host-numpy path
+(full (slots, chunk, V) logits round trip + numpy verifier) for
+benchmarking and identity testing; both modes emit byte-identical
+greedy token streams.
 
 Time: the scheduler shares a ``SimClock`` (serving/link.py) with
 whoever drives it (the ``SyneraServer`` event loop, or a private clock
@@ -64,7 +74,9 @@ class VerifyRequest:
     arrival_ms: float = 0.0       # absolute arrival on the shared clock
     # internal
     fed: int = 0
-    rows: list = field(default_factory=list)  # (abs_pos, logits row)
+    rows: list = field(default_factory=list)
+    # rows entries: (abs_pos, fused (tok, p_draft, topk_idx, topk_val))
+    # in fused mode, (abs_pos, full logits row) in legacy mode
 
 
 @dataclass
@@ -80,9 +92,11 @@ class VerificationAwareScheduler:
     def __init__(self, engine: CloudEngine, *, chunk: int = 32,
                  latency: CloudLatencyModel | None = None,
                  rng: np.random.Generator | None = None,
-                 clock: SimClock | None = None):
+                 clock: SimClock | None = None,
+                 fused: bool = True):
         self.engine = engine
         self.chunk = chunk
+        self.fused = fused
         self.latency = latency or CloudLatencyModel()
         self.rng = rng or np.random.default_rng(0)
         self.clock = clock or SimClock()
@@ -91,7 +105,7 @@ class VerificationAwareScheduler:
         self.active_verify: list[VerifyRequest] = []
         self.free_slots = list(range(engine.max_slots))
         self.cloud_len = np.zeros(engine.max_slots, np.int64)
-        self.last_row: dict[int, np.ndarray] = {}  # slot -> last fed logits row
+        self.last_row: dict[int, np.ndarray] = {}  # slot -> last prefill row
         self.iterations = 0           # iterations that executed a batch
         self.prefill_iterations = 0
         self.verify_iterations = 0
@@ -122,6 +136,10 @@ class VerificationAwareScheduler:
         assert self.chunk >= len(req.draft) + 1, \
             "Sarathi chunk must cover a draft chunk (+1) so rejected-draft " \
             "cache entries are overwritten before any query can attend to them"
+        if self.fused:
+            rows_max = getattr(self.engine, "verify_rows_max", self.chunk)
+            assert rows_max >= len(req.draft) + 1, \
+                "engine.verify_rows_max must cover gamma+1 verification rows"
         req.start_pos = int(self.cloud_len[req.slot])
         self.verify_q.append(req)
 
@@ -189,19 +207,25 @@ class VerificationAwareScheduler:
             T = len(r.tokens)
             tokens[r.slot, :T] = r.tokens
             positions[r.slot, :T] = np.arange(T)
-        logits = self.engine.feed(tokens, positions)
+        # one full-vocab row per slot crosses to the host here (the
+        # sampling verifier's pre-draft row); verify iterations never
+        # transfer a vocab-sized tensor
+        b0 = getattr(self.engine, "bytes_to_host", 0)
+        last_rows = self.engine.prefill(tokens, positions)
+        moved = getattr(self.engine, "bytes_to_host", 0) - b0
 
         events = []
         total = sum(len(r.tokens) for r in batch)
-        self.clock.advance(self.latency.prefill_ms(total))
+        self.clock.advance(self.latency.prefill_ms(total)
+                           + self.latency.host_transfer_ms(moved))
         self.prefill_iterations += 1
         for r in batch:
             T = len(r.tokens)
             self.cloud_len[r.slot] = T
-            self.last_row[r.slot] = logits[r.slot, T - 1]
+            self.last_row[r.slot] = last_rows[r.slot]
             events.append(SchedulerEvent(
                 "prefill_done", r.req_id, r.slot,
-                last_logits=logits[r.slot, T - 1]))
+                last_logits=last_rows[r.slot]))
         return events
 
     # -- verification partial prefill (lines 12-21) ---------------------
@@ -219,8 +243,12 @@ class VerificationAwareScheduler:
 
         B = self.engine.max_slots
         C = self.chunk
+        R = getattr(self.engine, "verify_rows_max", C) if self.fused else 0
         tokens = np.zeros((B, C), np.int32)
         positions = np.full((B, C), -1, np.int32)
+        targets = np.full((B, C), -1, np.int32)
+        sel_idx = np.full((B, max(R, 1)), -1, np.int32)
+        kept: dict[int, list[int]] = {}  # slot -> kept local row indices
         feeding: list[tuple[VerifyRequest, int, int]] = []
         used_slots = set()
         for req in self.active_verify:
@@ -233,14 +261,34 @@ class VerificationAwareScheduler:
             tokens[req.slot, :n] = seq[req.fed:req.fed + n]
             positions[req.slot, :n] = (req.start_pos + req.fed
                                        + np.arange(n))
+            if self.fused:
+                # row i predicts seq[fed+i+1]: the verifier's accept test
+                # needs its probability, gathered on device.  The last
+                # row of the request (the bonus row) has no target.
+                nt = min(n, len(seq) - req.fed - 1)
+                targets[req.slot, :nt] = seq[req.fed + 1:req.fed + 1 + nt]
+                # rows the verifier will consume: the last gamma+1 of the
+                # request — the device computes p/top-k only for these
+                keep_from = len(seq) - len(req.draft) - 1
+                local = [i for i in range(n) if req.fed + i >= keep_from]
+                kept[req.slot] = local
+                sel_idx[req.slot, :len(local)] = local
             feeding.append((req, req.fed, n))
             used_slots.add(req.slot)
 
         if not feeding:
             return None
-        logits = self.engine.feed(tokens, positions)
+        b0 = getattr(self.engine, "bytes_to_host", 0)
+        if self.fused:
+            need_dists = any(r.sampling != "greedy" for r, _, _ in feeding)
+            rows = self.engine.feed(tokens, positions, targets, sel_idx,
+                                    need_dists=need_dists)
+        else:
+            logits = self.engine.feed_logits(tokens, positions)
+        moved = getattr(self.engine, "bytes_to_host", 0) - b0
         total = sum(n for _, _, n in feeding)
-        self.clock.advance(self.latency.iteration_ms(total))
+        self.clock.advance(self.latency.iteration_ms(total)
+                           + self.latency.host_transfer_ms(moved))
         self.verify_iterations += 1
         self.verify_occupancy.append(len(feeding))
         self.verify_tokens_fed.append(total)
@@ -249,11 +297,20 @@ class VerificationAwareScheduler:
         for req, fed0, n in feeding:
             gamma = len(req.draft)
             seq_len = len(req.uncached) + gamma
-            keep_from = seq_len - gamma - 1  # rows for draft verification
-            for i in range(n):
-                idx = fed0 + i
-                if idx >= keep_from:
-                    req.rows.append((req.start_pos + idx, logits[req.slot, i]))
+            if self.fused:
+                for r, i in enumerate(kept[req.slot]):
+                    req.rows.append((req.start_pos + fed0 + i, (
+                        int(rows.token_id[req.slot, r]),
+                        float(rows.p_draft[req.slot, r]),
+                        rows.topk_idx[req.slot, r],
+                        rows.topk_val[req.slot, r])))
+            else:
+                keep_from = seq_len - gamma - 1
+                for i in range(n):
+                    idx = fed0 + i
+                    if idx >= keep_from:
+                        req.rows.append((req.start_pos + idx,
+                                         logits[req.slot, i]))
             req.fed = fed0 + n
             self.cloud_len[req.slot] = req.start_pos + req.fed
             if req.fed >= seq_len:
@@ -268,14 +325,45 @@ class VerificationAwareScheduler:
         need = gamma + 1
         rows = sorted(req.rows, key=lambda x: x[0])[-need:]
         if len(rows) < need:
-            # first verification right after prefill with no uncached
-            # tokens: the row preceding the draft is the prefill's last row
-            rows = [(-1, self.last_row[req.slot])] + rows
-        p_logits = np.stack([r[1] for r in rows])  # (gamma+1, V)
-        if req.sampling == "greedy":
-            res = V.verify_greedy(req.draft, p_logits)
+            # Only a 1-row shortfall is legitimate: the first
+            # verification right after prefill feeds no uncached token,
+            # so the row preceding the draft is the prefill's last row
+            # (retained per slot).  Anything else is a bookkeeping bug —
+            # fail loudly instead of silently mis-aligning rows.
+            if len(rows) != need - 1:
+                raise RuntimeError(
+                    f"verify req {req.req_id} (slot {req.slot}) retained "
+                    f"{len(rows)} rows but needs {need}: drafts must be "
+                    f"fed in full before verification")
+            if req.slot not in self.last_row:
+                raise RuntimeError(
+                    f"verify req {req.req_id} needs the prefill row for "
+                    f"slot {req.slot}, but no prefill was recorded")
+            pre = self.last_row[req.slot]
+            if self.fused:
+                # the prefill row's target (draft[0]) is only known now;
+                # mirror the device epilogue on the retained full row
+                pre = V.fused_row_from_logits(pre, int(req.draft[0]),
+                                              self.engine.verify_top_k)
+            rows = [(-1, pre)] + rows
+        if self.fused:
+            ids = np.array([r[1][0] for r in rows])
+            if req.sampling == "greedy":
+                res = V.verify_greedy_ids(req.draft, ids)
+            else:
+                p_draft = np.array([rows[t][1][1] for t in range(gamma)])
+                topk = [(rows[t][1][2], rows[t][1][3])
+                        for t in range(need)]
+                res = V.verify_sample_fused(req.draft, p_draft, topk,
+                                            req.q_sparse, self.rng,
+                                            self.engine.vocab)
         else:
-            res = V.verify_sample(req.draft, p_logits, req.q_sparse, self.rng)
+            p_logits = np.stack([r[1] for r in rows])  # (gamma+1, V)
+            if req.sampling == "greedy":
+                res = V.verify_greedy(req.draft, p_logits)
+            else:
+                res = V.verify_sample(req.draft, p_logits, req.q_sparse,
+                                      self.rng)
         # roll the cloud cache frontier back to the accepted prefix: the
         # rejected draft tokens were written to cache but their positions
         # will be overwritten by the corrected continuation (cache_write
@@ -286,8 +374,12 @@ class VerificationAwareScheduler:
 
     # -- plain decode (cloud-centric baseline) ---------------------------
     def decode_iteration(self, tokens: np.ndarray, positions: np.ndarray):
-        """tokens/positions: (max_slots, 1); position -1 = idle slot."""
-        logits = self.engine.decode(tokens, positions)
+        """tokens/positions: (max_slots, 1); position -1 = idle slot.
+        Returns the engine's fused DecodeRows (argmax + top-k support)."""
+        b0 = getattr(self.engine, "bytes_to_host", 0)
+        rows = self.engine.decode(tokens, positions)
+        moved = getattr(self.engine, "bytes_to_host", 0) - b0
         active = int((positions >= 0).sum())
-        self.clock.advance(self.latency.iteration_ms(active))
-        return logits
+        self.clock.advance(self.latency.iteration_ms(active)
+                           + self.latency.host_transfer_ms(moved))
+        return rows

@@ -214,8 +214,8 @@ def run_cloud_centric(engine: CloudEngine, prompts, max_new, *,
         while len(out) < max_new:
             tokens[slot, 0] = last
             positions[slot, 0] = len(prompt) + len(out) - 1
-            logits = sched.decode_iteration(tokens, positions)
-            last = int(np.argmax(logits[slot]))
+            rows = sched.decode_iteration(tokens, positions)
+            last = int(rows.token_id[slot])
             out.append(last)
         m = DeviceMetrics()
         m.tokens = out[:max_new]

@@ -4,28 +4,58 @@ workload interleavings can be explored quickly."""
 import numpy as np
 from hypothesis import given, settings, strategies as st
 
+from repro.serving.engine import VerifyRows
 from repro.serving.scheduler import (PrefillRequest, VerifyRequest,
                                      VerificationAwareScheduler)
 
 
 class StubEngine:
+    """Deterministic no-compute engine speaking the fused interface:
+    the row at position p has argmax (p * 7) % vocab with all its mass
+    there."""
+
     def __init__(self, max_slots=4, vocab=32):
         self.max_slots = max_slots
         self.vocab = vocab
+        self.verify_top_k = min(8, vocab)
         self.fed = []          # (slot, pos) log
 
-    def feed(self, tokens, positions):
-        for s in range(tokens.shape[0]):
-            for j in range(tokens.shape[1]):
-                if positions[s, j] >= 0:
-                    self.fed.append((s, int(positions[s, j])))
-        # deterministic logits: argmax = (position * 7) % vocab
+    def _tok(self, pos: int) -> int:
+        return (pos * 7) % self.vocab
+
+    def feed(self, tokens, positions, targets=None, sel_idx=None,
+             need_dists=True):
         B, C = tokens.shape
-        out = np.zeros((B, C, self.vocab), np.float32)
         for s in range(B):
             for j in range(C):
                 if positions[s, j] >= 0:
-                    out[s, j, (int(positions[s, j]) * 7) % self.vocab] = 1.0
+                    self.fed.append((s, int(positions[s, j])))
+        R = sel_idx.shape[1] if sel_idx is not None else 1
+        tok = np.zeros((B, R), np.int32)
+        p_t = np.zeros((B, R), np.float32)
+        tk_i = np.zeros((B, R, 1), np.int32)
+        tk_v = np.zeros((B, R, 1), np.float32)
+        if sel_idx is not None:
+            for s in range(B):
+                for r in range(R):
+                    i = int(sel_idx[s, r])
+                    if i < 0 or positions[s, i] < 0:
+                        continue
+                    t = self._tok(int(positions[s, i]))
+                    tok[s, r] = t
+                    tk_i[s, r, 0] = t
+                    tk_v[s, r, 0] = 1.0
+                    if targets is not None and targets[s, i] == t:
+                        p_t[s, r] = 1.0
+        return VerifyRows(tok, p_t, tk_i, tk_v)
+
+    def prefill(self, tokens, positions):
+        B = tokens.shape[0]
+        out = np.zeros((B, self.vocab), np.float32)
+        for s in range(B):
+            valid = positions[s][positions[s] >= 0]
+            if len(valid):
+                out[s, self._tok(int(valid.max()))] = 1.0
         return out
 
     def reset_slot(self, slot):

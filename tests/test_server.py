@@ -141,24 +141,9 @@ def test_never_offloading_session_cancels_prefill(pair, eng2):
     assert all(s.done for s in server.sessions)
 
 
-class _StubEngine:
-    """Deterministic no-compute engine (mirrors the property-test stub)."""
-
-    def __init__(self, max_slots=1, vocab=32):
-        self.max_slots = max_slots
-        self.vocab = vocab
-
-    def feed(self, tokens, positions):
-        B, C = tokens.shape
-        out = np.zeros((B, C, self.vocab), np.float32)
-        for s in range(B):
-            for j in range(C):
-                if positions[s, j] >= 0:
-                    out[s, j, (int(positions[s, j]) * 7) % self.vocab] = 1.0
-        return out
-
-    def reset_slot(self, slot):
-        pass
+# deterministic no-compute engine speaking the fused interface — shared
+# with the scheduler property tests so the stub cannot drift
+from tests.test_scheduler_property import StubEngine as _StubEngine  # noqa: E402
 
 
 def test_head_of_line_prefill_does_not_deadlock():

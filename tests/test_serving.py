@@ -79,7 +79,7 @@ def test_engine_slot_isolation(pair):
     toks = np.zeros((2, 8), np.int32)
     toks[0] = np.arange(1, 9); toks[1] = np.arange(9, 1, -1)
     pos = np.broadcast_to(np.arange(8), (2, 8)).astype(np.int32).copy()
-    logits = eng.feed(toks, pos)
+    logits = eng.feed_logits(toks, pos)
     # reference: per-sequence full forward
     for b in range(2):
         full, _, _, _ = M.forward(slm_cfg, slm_p, jnp.asarray(toks[b:b+1]),
@@ -98,12 +98,17 @@ def test_engine_reset_slot(pair):
     # slot 1 must be unaffected: decode continues correctly
     t = np.array([[3], [3]], np.int32)
     p = np.array([[8], [8]], np.int32)
-    logits = eng.decode(t, p)
+    logits = eng.decode_logits(t, p)
     ref_toks = np.concatenate([toks[1], [3]])
     full, _, _, _ = M.forward(slm_cfg, slm_p, jnp.asarray(ref_toks[None]),
                               M.default_positions(1, 9))
     np.testing.assert_allclose(logits[1], np.asarray(full[0, -1]),
                                atol=2e-4, rtol=2e-3)
+    # fused decode at the same position (cache_write is idempotent per
+    # position, so re-decoding token 3 @ 8 reproduces the same row)
+    rows = eng.decode(t, p)
+    assert int(rows.token_id[1]) == int(np.argmax(full[0, -1]))
+    assert int(rows.topk_idx[1, 0]) == int(rows.token_id[1])
 
 
 def test_synera_offload_all_equals_cloud_greedy(pair):
