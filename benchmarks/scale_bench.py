@@ -2,20 +2,31 @@
 verifier under the SyneraServer event loop (ROADMAP: heavy traffic /
 batching / async).
 
-For each stream count the same request set is served twice on a fresh
-slot state: sequentially (``concurrency=1``, the old blocking
-semantics) and concurrently (``concurrency=N``).  Greedy token streams
-are identical by construction (asserted); what changes is packing:
+Two sweeps:
 
-  * verify-iteration batch occupancy (slots fed per iteration)
-  * packed tokens per iteration
-  * total scheduler iterations and cloud makespan (shared sim clock)
-  * per-stream mean/p95 TBT (includes real cross-stream queueing)
-  * estimated cloud cost (paper §6.1)
+1. **Batching sweep** (``rows``): for each stream count the same request
+   set is served twice on a fresh slot state: sequentially
+   (``concurrency=1``, the old blocking semantics) and concurrently
+   (``concurrency=N``).  Greedy token streams are identical by
+   construction (asserted); what changes is packing:
+
+   * verify-iteration batch occupancy (slots fed per iteration)
+   * packed tokens per iteration
+   * total scheduler iterations and cloud makespan (shared sim clock)
+   * per-stream mean/p95 TBT (includes real cross-stream queueing)
+   * estimated cloud cost (paper §6.1)
+
+2. **Cache sweep** (``cache_rows``): dense vs paged KV cache at
+   oversubscribed concurrency (more sessions than engine slots, the
+   waiting-queue path).  Token streams are asserted identical; what
+   changes is memory: the dense engine reserves ``slots x s_max``
+   regardless of live lengths, the paged engine's footprint is its
+   peak block usage — reported as *cache bytes per served token*.
 
 Usage:
   PYTHONPATH=src:. python -m benchmarks.scale_bench [--fast] \
-      [--streams 1,2,4,8] [--out benchmarks/BENCH_scale.json]
+      [--streams 1,2,4,8] [--concurrency 8,32,128] \
+      [--out benchmarks/BENCH_scale.json]
 """
 from __future__ import annotations
 
@@ -86,16 +97,95 @@ def run_sweep(streams=(1, 2, 4, 8), max_new: int = 32, slots: int = 8,
     return dict(slots=slots, max_new=max_new, rows=rows)
 
 
+def run_cache_sweep(concurrency=(8, 32, 128), max_new: int = 8,
+                    slots: int = 8, block_size: int = 8) -> dict:
+    """Dense vs paged cache at oversubscribed concurrency.
+
+    Each stream count is served once on a dense engine and once on a
+    paged engine (same slots; the paged pool is left at dense capacity —
+    the saving reported is *peak blocks actually touched*, which is what
+    a right-sized pool must hold).  Outputs are asserted identical.
+    """
+    from benchmarks import paper_claims as PC
+    from benchmarks.prepare import get_pair
+    from repro.core.offload import OffloadPolicy
+    from repro.serving import synergy as SY
+
+    slm_cfg, slm_p, llm_cfg, llm_p, task = get_pair()
+    dev = PC.make_device(slm_cfg, slm_p,
+                         policy=OffloadPolicy(mode="all"),
+                         use_early_exit=False)
+
+    rows = []
+    for n in concurrency:
+        evalset = PC.eval_set(task, n, seed=23)
+        prompts = [p for p, _ in evalset]
+
+        eng_d = PC.make_engine(llm_cfg, llm_p, slots=slots)
+        t0 = time.time()
+        r_d = SY.run_synera(dev, eng_d, prompts, max_new, concurrency=n)
+        t_d = time.time() - t0
+        st_d = r_d.extras["scheduler"]
+
+        eng_p = PC.make_engine(llm_cfg, llm_p, slots=slots,
+                               cache_impl="paged", block_size=block_size)
+        t0 = time.time()
+        r_p = SY.run_synera(dev, eng_p, prompts, max_new, concurrency=n)
+        t_p = time.time() - t0
+        st_p = r_p.extras["scheduler"]
+
+        assert r_p.outputs == r_d.outputs, \
+            "paged serving must not change greedy token streams"
+
+        tokens = sum(len(m.tokens) for m in r_p.metrics)
+        # dense must reserve the full slots x s_max cache; a right-sized
+        # paged pool holds the peak block usage
+        dense_bytes = st_d["kv_cache_bytes"]
+        paged_bytes = st_p["kv_bytes_peak"]
+        rows.append(dict(
+            concurrency=n,
+            tokens=tokens,
+            dense_cache_bytes=dense_bytes,
+            paged_cache_bytes_peak=paged_bytes,
+            dense_bytes_per_token=dense_bytes / max(tokens, 1),
+            paged_bytes_per_token=paged_bytes / max(tokens, 1),
+            bytes_per_token_ratio=dense_bytes / max(paged_bytes, 1),
+            peak_used_blocks=st_p["peak_used_blocks"],
+            n_blocks=st_p["n_blocks"],
+            preemptions=st_p["preemptions"],
+            makespan_dense_ms=st_d["sim_ms"],
+            makespan_paged_ms=st_p["sim_ms"],
+            wall_s_dense=t_d,
+            wall_s_paged=t_p,
+        ))
+        print(f"concurrency={n:3d} dense={dense_bytes/2**20:.1f}MiB "
+              f"paged_peak={paged_bytes/2**20:.1f}MiB "
+              f"({rows[-1]['bytes_per_token_ratio']:.1f}x) "
+              f"blocks={st_p['peak_used_blocks']}/{st_p['n_blocks']} "
+              f"preempt={st_p['preemptions']}", flush=True)
+    return dict(slots=slots, max_new=max_new, block_size=block_size,
+                rows=rows)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
     ap.add_argument("--streams", default="1,2,4,8")
+    ap.add_argument("--concurrency", default="8,32,128",
+                    help="stream counts for the dense-vs-paged cache "
+                         "sweep ('' to skip)")
     ap.add_argument("--slots", type=int, default=8)
+    ap.add_argument("--block-size", type=int, default=8)
     ap.add_argument("--out", default="benchmarks/BENCH_scale.json")
     args = ap.parse_args()
     streams = tuple(int(s) for s in args.streams.split(","))
     res = run_sweep(streams=streams, max_new=16 if args.fast else 32,
                     slots=args.slots)
+    if args.concurrency:
+        conc = tuple(int(s) for s in args.concurrency.split(","))
+        res["cache_sweep"] = run_cache_sweep(
+            concurrency=conc, max_new=4 if args.fast else 8,
+            slots=args.slots, block_size=args.block_size)
     with open(args.out, "w") as f:
         json.dump(res, f, indent=2)
     print(f"wrote {args.out}")

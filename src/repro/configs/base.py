@@ -98,6 +98,12 @@ class ModelConfig:
     # --- serving ---
     sliding_window: int = 8_192  # long-context decode window for attention archs
     max_verify_chunk: int = 32   # Sarathi-style partial-prefill chunk
+    # KV cache layout: "dense" allocates (slots, s_max) up front; "paged"
+    # backs slots with a shared block pool + per-slot block tables
+    # (vLLM/PagedAttention layout) so memory scales with *actual* sequence
+    # lengths and admission is bound by free blocks, not slot count.
+    cache_impl: str = "dense"    # "dense" | "paged"
+    kv_block_size: int = 16      # tokens per KV block when cache_impl="paged"
 
     # --- implementation knobs (hillclimb levers) ---
     attn_impl: str = "blocked"   # "naive" | "blocked" (online-softmax scan)

@@ -115,3 +115,115 @@ def decode_attention(q, k, v, q_pos, kv_pos, *, window: int = 0,
     )(qg, kh, vh, qp, kv_pos)
 
     return out.reshape(B, nh, hd)
+
+
+# ---------------------------------------------------------------------------
+# Block-table (paged) variant: the KV cache is a shared pool of
+# fixed-size blocks; each slot's sequence is scattered across the pool
+# and addressed through its block table (vLLM/PagedAttention layout).
+# ---------------------------------------------------------------------------
+
+def _decode_paged_kernel(bt_ref, q_ref, k_ref, v_ref, qp_ref, kp_ref, o_ref,
+                         m_scr, l_scr, acc_scr, *, n_bt: int, nkv: int,
+                         window: int, scale: float):
+    bk = pl.program_id(0)
+    sb = pl.program_id(1)
+
+    @pl.when(sb == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    mapped = bt_ref[bk // nkv, sb] >= 0            # scalar: table entry valid
+    q = q_ref[0].astype(jnp.float32) * scale       # (g, hd)
+    k = k_ref[0, 0].astype(jnp.float32)            # (bs, hd): one pool block
+    v = v_ref[0, 0].astype(jnp.float32)
+    q_pos = qp_ref[0, 0]
+    kv_pos = kp_ref[0]                             # (bs,)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (g, bs)
+    valid = mapped & (kv_pos >= 0) & (kv_pos <= q_pos)
+    if window:
+        valid &= (q_pos - kv_pos) < window
+    s = jnp.where(valid[None, :], s, NEG_INF)
+
+    m_prev, l_prev, acc_prev = m_scr[...], l_scr[...], acc_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    corr = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    p = jnp.where(valid[None, :], p, 0.0)
+    l_new = l_prev * corr + jnp.sum(p, axis=1)
+    acc_new = acc_prev * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())))
+
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+    acc_scr[...] = acc_new
+
+    @pl.when(sb == n_bt - 1)
+    def _finish():
+        l = jnp.where(l_new == 0.0, 1.0, l_new)
+        o_ref[0] = (acc_new / l[:, None]).astype(o_ref.dtype)
+
+
+def decode_attention_paged(q, k_pool, v_pool, q_pos, pos_pool, block_tables,
+                           *, window: int = 0, interpret: bool = True):
+    """q: (B, nh, hd); k_pool, v_pool: (nb, bs, nkv, hd) shared block
+    pool; q_pos: (B,) int32; pos_pool: (nb, bs) int32 (absolute position
+    of each pool row, -1 = invalid); block_tables: (B, max_bps) int32
+    pool block ids per slot (-1 = unmapped).
+
+    The block table is a scalar-prefetch operand: the grid's KV axis
+    walks the table, and each program's index map reads the table to DMA
+    exactly that slot's pool block — no gathered (B, s_max) copy exists.
+    Unmapped entries clamp to block 0 for the DMA and are masked wholesale
+    in the kernel.  Returns out (B, nh, hd).
+    """
+    B, nh, hd = q.shape
+    nb, bs, nkv = k_pool.shape[0], k_pool.shape[1], k_pool.shape[2]
+    g = nh // nkv
+    max_bps = block_tables.shape[1]
+    scale = 1.0 / (hd ** 0.5)
+
+    qg = q.reshape(B * nkv, g, hd)
+    kh = jnp.moveaxis(k_pool, 2, 1)                # (nb, nkv, bs, hd)
+    vh = jnp.moveaxis(v_pool, 2, 1)
+    qp = q_pos.reshape(B, 1).astype(jnp.int32)
+    bt = block_tables.astype(jnp.int32)
+
+    kernel = functools.partial(_decode_paged_kernel, n_bt=max_bps, nkv=nkv,
+                               window=window, scale=scale)
+
+    def kv_map(bk, sb, bt, nkv=nkv):
+        return (jnp.maximum(bt[bk // nkv, sb], 0), bk % nkv, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B * nkv, max_bps),
+        in_specs=[
+            pl.BlockSpec((1, g, hd), lambda bk, sb, bt: (bk, 0, 0)),
+            pl.BlockSpec((1, 1, bs, hd), kv_map),
+            pl.BlockSpec((1, 1, bs, hd), kv_map),
+            pl.BlockSpec((1, 1),
+                         lambda bk, sb, bt, nkv=nkv: (bk // nkv, 0)),
+            pl.BlockSpec((1, bs),
+                         lambda bk, sb, bt, nkv=nkv: (
+                             jnp.maximum(bt[bk // nkv, sb], 0), 0)),
+        ],
+        out_specs=pl.BlockSpec((1, g, hd), lambda bk, sb, bt: (bk, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g, hd), jnp.float32),
+        ],
+    )
+
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B * nkv, g, hd), q.dtype),
+        interpret=interpret,
+    )(bt, qg, kh, vh, qp, pos_pool)
+
+    return out.reshape(B, nh, hd)

@@ -5,7 +5,8 @@ from functools import partial
 
 import jax
 
-from repro.kernels.decode_gqa.decode_gqa import decode_attention
+from repro.kernels.decode_gqa.decode_gqa import (decode_attention,
+                                                 decode_attention_paged)
 
 
 @partial(jax.jit, static_argnames=("window", "block_kv", "interpret"))
@@ -13,3 +14,11 @@ def gqa_decode(q, k, v, q_pos, kv_pos, *, window: int = 0,
                block_kv: int = 512, interpret: bool = True):
     return decode_attention(q, k, v, q_pos, kv_pos, window=window,
                             block_kv=block_kv, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("window", "interpret"))
+def gqa_decode_paged(q, k_pool, v_pool, q_pos, pos_pool, block_tables, *,
+                     window: int = 0, interpret: bool = True):
+    return decode_attention_paged(q, k_pool, v_pool, q_pos, pos_pool,
+                                  block_tables, window=window,
+                                  interpret=interpret)

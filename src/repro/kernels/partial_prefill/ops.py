@@ -6,7 +6,7 @@ from functools import partial
 import jax
 
 from repro.kernels.partial_prefill.partial_prefill import (
-    partial_prefill_attention)
+    partial_prefill_attention, partial_prefill_attention_paged)
 
 
 @partial(jax.jit, static_argnames=("window", "block_kv", "interpret"))
@@ -14,3 +14,11 @@ def partial_prefill(q, k, v, q_pos, kv_pos, *, window: int = 0,
                     block_kv: int = 512, interpret: bool = True):
     return partial_prefill_attention(q, k, v, q_pos, kv_pos, window=window,
                                      block_kv=block_kv, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("window", "interpret"))
+def partial_prefill_paged(q, k_pool, v_pool, q_pos, pos_pool, block_tables,
+                          *, window: int = 0, interpret: bool = True):
+    return partial_prefill_attention_paged(q, k_pool, v_pool, q_pos,
+                                           pos_pool, block_tables,
+                                           window=window, interpret=interpret)

@@ -121,3 +121,112 @@ def partial_prefill_attention(q, k, v, q_pos, kv_pos, *, window: int = 0,
     )(qh, kh, vh, q_pos, kv_pos)
 
     return jnp.moveaxis(out.reshape(B, nh, C, hd), 1, 2)
+
+
+# ---------------------------------------------------------------------------
+# Block-table (paged) variant: the cached prefix lives in a shared pool
+# of fixed-size blocks addressed through per-slot block tables.
+# ---------------------------------------------------------------------------
+
+def _pp_paged_kernel(bt_ref, q_ref, k_ref, v_ref, qp_ref, kp_ref, o_ref,
+                     m_scr, l_scr, acc_scr, *, n_bt: int, nh: int,
+                     window: int, scale: float):
+    bh = pl.program_id(0)
+    sb = pl.program_id(1)
+
+    @pl.when(sb == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    mapped = bt_ref[bh // nh, sb] >= 0
+    q = q_ref[0].astype(jnp.float32) * scale       # (C, hd)
+    k = k_ref[0, 0].astype(jnp.float32)            # (bs, hd): one pool block
+    v = v_ref[0, 0].astype(jnp.float32)
+    q_pos = qp_ref[0]                              # (C,)
+    kv_pos = kp_ref[0]                             # (bs,)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (C, bs)
+    valid = mapped & (kv_pos[None, :] >= 0) & (q_pos[:, None] >= 0) \
+        & (kv_pos[None, :] <= q_pos[:, None])
+    if window:
+        valid &= (q_pos[:, None] - kv_pos[None, :]) < window
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev, l_prev, acc_prev = m_scr[...], l_scr[...], acc_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    corr = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    p = jnp.where(valid, p, 0.0)
+    l_new = l_prev * corr + jnp.sum(p, axis=1)
+    acc_new = acc_prev * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())))
+
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+    acc_scr[...] = acc_new
+
+    @pl.when(sb == n_bt - 1)
+    def _finish():
+        l = jnp.where(l_new == 0.0, 1.0, l_new)
+        o_ref[0] = (acc_new / l[:, None]).astype(o_ref.dtype)
+
+
+def partial_prefill_attention_paged(q, k_pool, v_pool, q_pos, pos_pool,
+                                    block_tables, *, window: int = 0,
+                                    interpret: bool = True):
+    """q: (B, C, nh, hd); k_pool, v_pool: (nb, bs, nkv, hd) shared block
+    pool; q_pos: (B, C) int32; pos_pool: (nb, bs) int32; block_tables:
+    (B, max_bps) int32 (-1 = unmapped).
+
+    Same scalar-prefetch design as ``decode_attention_paged``: the
+    grid's KV axis walks each slot's block table and DMAs exactly the
+    mapped pool blocks; unmapped entries clamp to block 0 and are masked
+    in full.  Returns out (B, C, nh, hd).
+    """
+    B, C, nh, hd = q.shape
+    nb, bs, nkv = k_pool.shape[0], k_pool.shape[1], k_pool.shape[2]
+    g = nh // nkv
+    max_bps = block_tables.shape[1]
+    scale = 1.0 / (hd ** 0.5)
+
+    qh = jnp.moveaxis(q, 2, 1).reshape(B * nh, C, hd)
+    kh = jnp.moveaxis(k_pool, 2, 1)                # (nb, nkv, bs, hd)
+    vh = jnp.moveaxis(v_pool, 2, 1)
+    bt = block_tables.astype(jnp.int32)
+
+    kernel = functools.partial(_pp_paged_kernel, n_bt=max_bps, nh=nh,
+                               window=window, scale=scale)
+
+    def kv_map(bh, sb, bt, nh=nh, g=g):
+        return (jnp.maximum(bt[bh // nh, sb], 0), (bh % nh) // g, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B * nh, max_bps),
+        in_specs=[
+            pl.BlockSpec((1, C, hd), lambda bh, sb, bt: (bh, 0, 0)),
+            pl.BlockSpec((1, 1, bs, hd), kv_map),
+            pl.BlockSpec((1, 1, bs, hd), kv_map),
+            pl.BlockSpec((1, C), lambda bh, sb, bt, nh=nh: (bh // nh, 0)),
+            pl.BlockSpec((1, bs),
+                         lambda bh, sb, bt, nh=nh: (
+                             jnp.maximum(bt[bh // nh, sb], 0), 0)),
+        ],
+        out_specs=pl.BlockSpec((1, C, hd), lambda bh, sb, bt: (bh, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((C,), jnp.float32),
+            pltpu.VMEM((C,), jnp.float32),
+            pltpu.VMEM((C, hd), jnp.float32),
+        ],
+    )
+
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B * nh, C, hd), q.dtype),
+        interpret=interpret,
+    )(bt, qh, kh, vh, q_pos, pos_pool)
+
+    return jnp.moveaxis(out.reshape(B, nh, C, hd), 1, 2)

@@ -48,6 +48,20 @@ def main():
                     help="top-k sampling support the fused verification "
                          "epilogue keeps device-side per row (the only "
                          "distribution state that crosses to the host)")
+    ap.add_argument("--cache-impl", default=None,
+                    choices=["dense", "paged"],
+                    help="cloud KV cache layout: 'dense' reserves slots x "
+                         "s_max up front; 'paged' backs slots with a "
+                         "shared block pool + block tables so memory "
+                         "scales with live sequence lengths and the "
+                         "scheduler admits/preempts by free blocks")
+    ap.add_argument("--block-size", type=int, default=None,
+                    help="tokens per KV block (paged cache; must divide "
+                         "the engine s_max)")
+    ap.add_argument("--pool-blocks", type=int, default=None,
+                    help="total blocks in the paged pool (default: dense "
+                         "capacity, slots x s_max / block-size; smaller "
+                         "pools trade memory for preemptions)")
     ap.add_argument("--json", action="store_true")
     args = ap.parse_args()
     if args.concurrency < 0:
@@ -67,7 +81,10 @@ def main():
     link = LinkModel(bandwidth_mbps=args.bandwidth_mbps)
     eng = PC.make_engine(llm_cfg, llm_p, slots=args.slots,
                          attn_impl=args.attn_impl,
-                         verify_top_k=args.verify_top_k)
+                         verify_top_k=args.verify_top_k,
+                         cache_impl=args.cache_impl,
+                         block_size=args.block_size,
+                         pool_blocks=args.pool_blocks)
     concurrency = None if args.concurrency == 0 else args.concurrency
     arrivals = None
     if args.arrival_rate > 0:
@@ -121,6 +138,15 @@ def main():
             verify_occupancy=sched["mean_verify_occupancy"],
             packed_tokens=sched["mean_packed_tokens"],
             iterations=sched["iterations"])
+        if sched.get("cache_impl") == "paged":
+            summary.update(
+                cache_impl="paged",
+                block_size=sched["block_size"],
+                blocks_used_peak=(f"{sched['peak_used_blocks']}"
+                                  f"/{sched['n_blocks']}"),
+                kv_bytes_peak=sched["kv_bytes_peak"],
+                kv_cache_bytes=sched["kv_cache_bytes"],
+                preemptions=sched["preemptions"])
     summary.update(
         engine_host_bytes=eng.bytes_to_host,
         engine_specializations=eng.compile_stats["n_specializations"])

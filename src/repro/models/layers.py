@@ -286,6 +286,83 @@ def cache_write(cache, k_new, v_new, positions):
     }
 
 
+# -- paged (block-pool) cache: vLLM/PagedAttention layout -------------------
+
+def is_paged(cache) -> bool:
+    """A paged per-layer cache carries a ``block_tables`` leaf."""
+    return cache is not None and "block_tables" in cache
+
+
+def cache_write_paged(cache, k_new, v_new, positions):
+    """Scatter new K/V into the shared block pool through each slot's
+    block table.
+
+    cache: {"k"/"v": (nb, bs, nkv, hd), "pos": (nb, bs),
+            "block_tables": (B, max_bps)}.  Token at absolute position p
+    lives at virtual slot ``v = p % s_max`` (circular when windowed),
+    i.e. pool block ``block_tables[b, v // bs]``, row ``v % bs``.
+    Padding (position -1) and unmapped table entries (-1) route to an
+    out-of-bounds pool index, which XLA scatter drops — exactly the
+    dense ``cache_write`` contract.
+    """
+    nb, bs = cache["k"].shape[0], cache["k"].shape[1]
+    bt = cache["block_tables"]                   # (B, max_bps)
+    s_max = bt.shape[1] * bs
+    B = k_new.shape[0]
+    vslot = jnp.where(positions >= 0, positions % s_max, 0)   # (B, T)
+    b_idx = jnp.arange(B)[:, None]
+    entry = bt[b_idx, vslot // bs]               # (B, T) pool block ids
+    blk = jnp.where((positions >= 0) & (entry >= 0), entry, nb)  # OOB drop
+    local = vslot % bs
+    return {
+        "k": cache["k"].at[blk, local].set(k_new.astype(cache["k"].dtype)),
+        "v": cache["v"].at[blk, local].set(v_new.astype(cache["v"].dtype)),
+        "pos": cache["pos"].at[blk, local].set(positions),
+        "block_tables": bt,
+    }
+
+
+def paged_kv_view(cache):
+    """Gather a slot-major (B, s_max, ...) view of the paged pool — the
+    XLA read path.  Unmapped table entries (-1) are forced out of bounds
+    (negative indices would wrap under jnp.take's fill mode) and read as
+    K/V = 0, pos = -1, i.e. masked — the gathered view is element-wise
+    identical to the dense cache after the same writes.
+    """
+    bt = cache["block_tables"]                   # (B, max_bps)
+    nb = cache["k"].shape[0]
+    btc = jnp.where(bt < 0, nb, bt)
+    k = jnp.take(cache["k"], btc, axis=0, mode="fill", fill_value=0)
+    v = jnp.take(cache["v"], btc, axis=0, mode="fill", fill_value=0)
+    pos = jnp.take(cache["pos"], btc, axis=0, mode="fill", fill_value=-1)
+    B, mb, bs = pos.shape
+    return (k.reshape(B, mb * bs, *k.shape[3:]),
+            v.reshape(B, mb * bs, *v.shape[3:]),
+            pos.reshape(B, mb * bs))
+
+
+def paged_pallas_attention(q, cache, q_pos, *, window: int = 0):
+    """Dispatch the block-table-aware Pallas kernels over the pool
+    directly (no gathered copy is materialized): ``decode_gqa`` for
+    T == 1, ``partial_prefill`` for verification chunks.  Interpret-mode
+    fallback off-TPU, same as the dense kernels."""
+    from repro.kernels.decode_gqa.decode_gqa import decode_attention_paged
+    from repro.kernels.partial_prefill.partial_prefill import (
+        partial_prefill_attention_paged)
+
+    interpret = _pallas_interpret()
+    q_pos = q_pos.astype(jnp.int32)
+    k, v = cache["k"], cache["v"]
+    pos, bt = cache["pos"], cache["block_tables"]
+    if q.shape[1] == 1:
+        out = decode_attention_paged(q[:, 0], k, v, q_pos[:, 0], pos, bt,
+                                     window=window, interpret=interpret)
+        return out[:, None]
+    return partial_prefill_attention_paged(q, k, v, q_pos, pos, bt,
+                                           window=window,
+                                           interpret=interpret)
+
+
 # ---------------------------------------------------------------------------
 # Attention block (projections + rope + cache + core)
 # ---------------------------------------------------------------------------
@@ -345,7 +422,17 @@ def attn_block(p, x, positions, cfg, cache=None, *, kv_x=None, kv_pos=None,
             k = apply_rope(k, src_pos, cfg.rope_theta)
 
     new_cache = None
-    if cache is not None:
+    if cache is not None and is_paged(cache):
+        new_cache = cache_write_paged(cache, k, v, positions)
+        if (cfg.attn_impl == "pallas" and causal and not return_importance):
+            # block-table-aware kernels read the pool in place — the
+            # (B, s_max) gathered copy is never materialized
+            out = paged_pallas_attention(q, new_cache, positions,
+                                         window=window)
+            out = out.reshape(B, T, nh * hd) @ p["wo"]
+            return out, new_cache, None
+        k_all, v_all, kv_positions = paged_kv_view(new_cache)
+    elif cache is not None:
         new_cache = cache_write(cache, k, v, positions)
         k_all, v_all, kv_positions = new_cache["k"], new_cache["v"], new_cache["pos"]
     else:

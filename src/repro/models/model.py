@@ -153,11 +153,57 @@ def init_params(cfg, key):
 # Cache init
 # ---------------------------------------------------------------------------
 
-def init_cache(cfg, batch: int, s_max: int):
+def init_cache(cfg, batch: int, s_max: int, *, cache_impl: str | None = None,
+               block_size: int | None = None, pool_blocks: int | None = None):
     """Serving cache. ``s_max`` is the attention buffer length (the
-    sliding window size for long-context decode)."""
+    sliding window size for long-context decode).
+
+    ``cache_impl`` (default ``cfg.cache_impl``) selects the layout:
+
+    * ``"dense"`` -- one contiguous (batch, s_max) buffer per slot; memory
+      cost is ``batch * s_max`` regardless of actual sequence lengths.
+    * ``"paged"`` -- a shared pool of ``pool_blocks`` fixed-size blocks
+      (``block_size`` tokens each, default ``cfg.kv_block_size``) plus a
+      per-slot ``block_tables`` (batch, s_max/block_size) int32 map; -1
+      marks an unmapped table entry.  Unmapped/invalid entries read as
+      pos=-1 (masked) so attention over the gathered view is bit-identical
+      to the dense path.  ``pool_blocks`` defaults to dense capacity
+      (``batch * s_max / block_size``); serving engines pass a smaller
+      pool and page slots on demand (serving/engine.BlockAllocator).
+      Only kv_stack families (dense, moe) support paging — SSM/conv
+      states are fixed-size per slot and have nothing to page.
+    """
     dt = _dtype(cfg)
     hd, nkv = cfg.head_dim, cfg.n_kv_heads
+    impl = cache_impl or getattr(cfg, "cache_impl", "dense")
+
+    if impl == "paged":
+        bs = block_size or cfg.kv_block_size
+        if cfg.family not in ("dense", "moe"):
+            raise ValueError(
+                f"cache_impl='paged' supports dense/moe families (pure "
+                f"kv_stack caches); got {cfg.family!r}")
+        if s_max % bs:
+            raise ValueError(f"s_max {s_max} not divisible by "
+                             f"kv block size {bs}")
+        max_bps = s_max // bs                 # blocks per slot
+        nb = pool_blocks if pool_blocks is not None else batch * max_bps
+
+        def kv_stack(n):
+            return {
+                "k": jnp.zeros((n, nb, bs, nkv, hd), dt),
+                "v": jnp.zeros((n, nb, bs, nkv, hd), dt),
+                "pos": jnp.full((n, nb, bs), -1, jnp.int32),
+                # replicated along the layer axis so every cache leaf
+                # aligns with the lax.scan over stacked layers
+                "block_tables": jnp.full((n, batch, max_bps), -1,
+                                         jnp.int32),
+            }
+
+        if cfg.family == "dense" or cfg.moe_every == 1:
+            return {"layers": kv_stack(cfg.n_layers)}
+        n_rounds = cfg.n_layers // cfg.moe_every
+        return {"dense": kv_stack(n_rounds), "moe": kv_stack(n_rounds)}
 
     def kv_stack(n):
         return {

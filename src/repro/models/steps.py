@@ -3,6 +3,15 @@ serving engine, and the multi-pod dry-run.
 
 Every factory closes over the static config and returns a pure function
 of (params, state/batch) suitable for ``jax.jit(..., in_shardings=...)``.
+
+Cache substrate: the serving steps are layout-agnostic — the cache
+pytree they thread through ``model.forward`` is either the dense
+``(slots, s_max)`` buffer or the paged block pool + per-slot block
+tables (``cfg.cache_impl="paged"``), and attention reads/writes route
+through the tables structurally (layers.cache_write_paged /
+paged_kv_view / the block-table Pallas kernels).  The engine mutates
+only the ``block_tables`` leaves between calls, so the jitted steps
+never re-specialize on allocation changes.
 """
 from __future__ import annotations
 

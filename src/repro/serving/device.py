@@ -159,7 +159,11 @@ class DeviceRuntime:
         # importance extraction needs the attention matrix (naive) or the
         # fused attn_importance Pallas kernel; anything else maps to naive
         impl = "pallas" if cfg.attn_impl == "pallas" else "naive"
-        self.cfg = cfg.replace(attn_impl=impl, remat=False)
+        # the device cache is a single short dense buffer (batch=1); paging
+        # is a cloud-engine concern — force the dense layout here so the
+        # importance slot math (pos % s_max) stays valid
+        self.cfg = cfg.replace(attn_impl=impl, remat=False,
+                               cache_impl="dense")
         self.params = params
         self.s_max = s_max
         self.gamma = gamma

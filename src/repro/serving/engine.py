@@ -38,6 +38,7 @@ specializations actually taken.
 from __future__ import annotations
 
 import warnings
+from collections import deque
 from dataclasses import dataclass
 
 import numpy as np
@@ -50,6 +51,115 @@ from repro.models.steps import (make_cloud_decode_step, make_cloud_verify_step,
                                 make_decode_step, make_verify_step)
 
 DEFAULT_FEED_BUCKETS = (8, 16, 32, 64, 128, 256)
+
+
+class BlockPoolExhausted(RuntimeError):
+    """Raised when a step needs more KV blocks than the pool has free.
+    The scheduler's admission/preemption layer is supposed to prevent
+    this from ever reaching the engine; seeing it means a policy bug or
+    an unguarded driver (e.g. plain decode on an undersized pool)."""
+
+
+class BlockAllocator:
+    """Host-side free-list allocator over the paged KV block pool.
+
+    Mechanism only: tracks which pool blocks back which slot and keeps
+    the (max_slots, max_bps) block table mirror the engine pushes to the
+    device cache.  Admission/eviction *policy* lives in the scheduler.
+    Blocks are recycled FIFO so reuse spreads across the pool.
+    """
+
+    def __init__(self, n_blocks: int, block_size: int, max_slots: int,
+                 max_blocks_per_slot: int):
+        self.n_blocks = n_blocks
+        self.block_size = block_size
+        self.max_blocks_per_slot = max_blocks_per_slot
+        self._free: deque[int] = deque(range(n_blocks))
+        self.table = np.full((max_slots, max_blocks_per_slot), -1, np.int32)
+        self.n_blocks_of = np.zeros(max_slots, np.int64)
+        self.peak_used = 0
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_blocks(self) -> int:
+        return self.n_blocks - len(self._free)
+
+    def blocks_for(self, n_tokens: int) -> int:
+        """Blocks needed to back a sequence of ``n_tokens`` (the caller
+        caps at s_max tokens — the circular window wraps beyond it)."""
+        need = -(-max(int(n_tokens), 0) // self.block_size)
+        return min(need, self.max_blocks_per_slot)
+
+    def needed(self, slot: int, seq_len: int) -> int:
+        """Additional blocks ``slot`` needs to cover ``seq_len`` tokens."""
+        return max(0, self.blocks_for(seq_len) - int(self.n_blocks_of[slot]))
+
+    def extend(self, slot: int, seq_len: int) -> bool:
+        """Grow ``slot`` to cover ``seq_len`` tokens.  All-or-nothing:
+        returns False (no allocation) if the pool cannot supply it."""
+        need = self.needed(slot, seq_len)
+        if need > len(self._free):
+            return False
+        have = int(self.n_blocks_of[slot])
+        for j in range(have, have + need):
+            self.table[slot, j] = self._free.popleft()
+        self.n_blocks_of[slot] = have + need
+        self.peak_used = max(self.peak_used, self.used_blocks)
+        return True
+
+    def release(self, slot: int) -> np.ndarray:
+        """Return all of ``slot``'s blocks to the pool; returns the freed
+        block ids (the engine invalidates their pool positions)."""
+        n = int(self.n_blocks_of[slot])
+        freed = self.table[slot, :n].copy()
+        self._free.extend(int(b) for b in freed)
+        self.table[slot, :] = -1
+        self.n_blocks_of[slot] = 0
+        return freed
+
+
+def _reset_paged_blocks(cache, blocks):
+    """Invalidate the pool positions of freed blocks (one jitted,
+    donated dispatch).  ``blocks`` is a fixed-size (max_bps,) int32 array
+    padded with -1; padding maps out of bounds, which scatter drops.
+    Freed K/V stays stale — a block is only ever read through a table
+    entry, and re-allocated blocks are re-written before their positions
+    turn valid again."""
+
+    def walk(c):
+        out = {}
+        for k, v in c.items():
+            if isinstance(v, dict):
+                out[k] = walk(v)
+            elif k == "pos":                       # (n, nb, bs)
+                idx = jnp.where(blocks >= 0, blocks, v.shape[1])
+                out[k] = v.at[:, idx].set(-1)
+            else:
+                out[k] = v
+        return out
+
+    return walk(cache)
+
+
+def _set_block_tables(cache, table):
+    """Replace every ``block_tables`` leaf with the allocator's current
+    (max_slots, max_bps) table, broadcast along the layer axis."""
+
+    def walk(c):
+        out = {}
+        for k, v in c.items():
+            if isinstance(v, dict):
+                out[k] = walk(v)
+            elif k == "block_tables":
+                out[k] = jnp.broadcast_to(table[None], v.shape)
+            else:
+                out[k] = v
+        return out
+
+    return walk(cache)
 
 
 def _call_donated(fn, *args):
@@ -130,7 +240,9 @@ class CloudEngine:
     def __init__(self, cfg, params, *, max_slots: int = 8, s_max: int = 2048,
                  window: int = 0, verify_top_k: int = 8,
                  verify_rows_max: int = 8,
-                 feed_buckets: tuple = DEFAULT_FEED_BUCKETS):
+                 feed_buckets: tuple = DEFAULT_FEED_BUCKETS,
+                 cache_impl: str | None = None, block_size: int | None = None,
+                 pool_blocks: int | None = None):
         self.cfg = cfg
         self.params = params
         self.max_slots = max_slots
@@ -142,7 +254,26 @@ class CloudEngine:
         # selected rows per slot per iteration (>= gamma + 1)
         self.verify_rows_max = verify_rows_max
         self.feed_buckets = tuple(sorted(feed_buckets))
-        self.cache = M.init_cache(cfg, max_slots, s_max)
+        # -- cache substrate: dense (slots x s_max up front) or paged
+        # (shared block pool + per-slot block tables, memory-bound) ------
+        self.cache_impl = cache_impl or getattr(cfg, "cache_impl", "dense")
+        self.block_size = block_size or getattr(cfg, "kv_block_size", 16)
+        self.allocator: BlockAllocator | None = None
+        if self.cache_impl == "paged":
+            max_bps = -(-s_max // self.block_size)
+            nb = (pool_blocks if pool_blocks is not None
+                  else max_slots * max_bps)
+            self.allocator = BlockAllocator(nb, self.block_size, max_slots,
+                                            max_bps)
+            self.cache = M.init_cache(cfg, max_slots, s_max,
+                                      cache_impl="paged",
+                                      block_size=self.block_size,
+                                      pool_blocks=nb)
+            self._reset_blocks = jax.jit(_reset_paged_blocks,
+                                         donate_argnums=0)
+            self._tables_dirty = False
+        else:
+            self.cache = M.init_cache(cfg, max_slots, s_max)
         self._step = jax.jit(
             make_cloud_verify_step(cfg, window=window,
                                    top_k=self.verify_top_k),
@@ -186,8 +317,97 @@ class CloudEngine:
 
     # -- cache management ----------------------------------------------
     def reset_slot(self, slot: int):
-        """Invalidate a slot's cache in one jitted, donated dispatch."""
+        """Invalidate a slot's cache in one jitted, donated dispatch.
+        Paged: the slot's blocks return to the pool and their pool
+        positions are invalidated (a freed block must never read as
+        valid through a future owner's table)."""
+        if self.allocator is not None:
+            freed = self.allocator.release(slot)
+            if len(freed):
+                pad = np.full(self.allocator.max_blocks_per_slot, -1,
+                              np.int32)
+                pad[:len(freed)] = freed
+                self.cache = _call_donated(self._reset_blocks, self.cache,
+                                           jnp.asarray(pad))
+            self._tables_dirty = True
+            self._sync_tables()
+            return
         self.cache = _call_donated(self._reset, self.cache, jnp.int32(slot))
+
+    # -- paged block management ----------------------------------------
+    def _sync_tables(self):
+        """Push the allocator's block-table mirror into every
+        ``block_tables`` cache leaf (host-side leaf swap, no jit)."""
+        if self.allocator is not None and self._tables_dirty:
+            self.cache = _set_block_tables(
+                self.cache, jnp.asarray(self.allocator.table))
+            self._tables_dirty = False
+
+    def _ensure_blocks(self, positions: np.ndarray):
+        """Grow each active slot's allocation to cover the highest
+        position this step writes (capped at s_max — the circular window
+        wraps beyond it).  Raises :class:`BlockPoolExhausted` when the
+        pool is dry; the scheduler's admission + preemption layer is
+        responsible for never letting that happen."""
+        if self.allocator is None:
+            return
+        pos = np.asarray(positions)
+        for slot in range(pos.shape[0]):
+            valid = pos[slot][pos[slot] >= 0]
+            if valid.size == 0:
+                continue
+            L = min(int(valid.max()) + 1, self.s_max)
+            if self.allocator.needed(slot, L):
+                if not self.allocator.extend(slot, L):
+                    raise BlockPoolExhausted(
+                        f"slot {slot} needs {self.allocator.needed(slot, L)}"
+                        f" more KV blocks; pool has "
+                        f"{self.allocator.free_blocks} free")
+                self._tables_dirty = True
+        self._sync_tables()
+
+    def kv_cache_bytes(self) -> int:
+        """Total bytes backing the KV cache (dense buffers or the whole
+        block pool + tables)."""
+        return int(sum(x.nbytes for x in jax.tree.leaves(self.cache)))
+
+    def block_bytes(self) -> int:
+        """Bytes one pool block occupies across all layers/stacks."""
+        assert self.allocator is not None
+        nb = self.allocator.n_blocks
+        total = 0
+
+        def walk(c):
+            nonlocal total
+            for k, v in c.items():
+                if isinstance(v, dict):
+                    walk(v)
+                elif k in ("k", "v", "pos"):
+                    total += v.nbytes // nb
+
+        walk(self.cache)
+        return total
+
+    @property
+    def pool_stats(self) -> dict:
+        """Block-pool utilization telemetry (ServerStats / serve.py).
+        Dense engines report their full reservation as in-use — that is
+        the point of comparison: dense memory cost is ``max_slots x
+        s_max`` regardless of actual sequence lengths."""
+        total = self.kv_cache_bytes()
+        if self.allocator is None:
+            return dict(cache_impl="dense", kv_cache_bytes=total,
+                        kv_bytes_in_use=total, kv_bytes_peak=total,
+                        free_blocks=0, used_blocks=0, peak_used_blocks=0,
+                        n_blocks=0, block_size=0)
+        a = self.allocator
+        bb = self.block_bytes()
+        return dict(cache_impl="paged", kv_cache_bytes=total,
+                    kv_bytes_in_use=a.used_blocks * bb,
+                    kv_bytes_peak=a.peak_used * bb,
+                    free_blocks=a.free_blocks, used_blocks=a.used_blocks,
+                    peak_used_blocks=a.peak_used, n_blocks=a.n_blocks,
+                    block_size=a.block_size)
 
     # -- bucketing ------------------------------------------------------
     def _bucket_of(self, n: int) -> int:
@@ -245,6 +465,7 @@ class CloudEngine:
         argmax-only step variant.  Only the fused rows cross to the host.
         """
         self._calls["feed"] += 1
+        self._ensure_blocks(positions)
         B, C = tokens.shape
         R = self.verify_rows_max
         if targets is None:
@@ -287,6 +508,7 @@ class CloudEngine:
         vocab-row per slot — and writes the cache.  Slots with no valid
         positions return zeros."""
         self._calls["prefill"] += 1
+        self._ensure_blocks(positions)
         B, C = tokens.shape
         counts = (positions >= 0).sum(axis=1)
         targets = np.full((B, C), -1, np.int32)
@@ -302,9 +524,16 @@ class CloudEngine:
                                   with_dists=False)
             sel = (counts > 0) & (counts - 1 >= off) & (counts - 1 < off + w)
             if sel.any():
-                last = np.asarray(res[4], np.float32)
-                out[sel] = last[sel]
-                self.bytes_to_host += last.nbytes
+                # gather on device only the slots whose LAST prompt row
+                # lives in this sub-chunk — the documented transfer is
+                # one vocab row per prefilled slot, not (slots, V) per
+                # sub-chunk
+                idx = np.where(sel)[0]
+                rows = np.asarray(
+                    jnp.take(res[4], jnp.asarray(idx, jnp.int32), axis=0),
+                    np.float32)
+                out[idx] = rows
+                self.bytes_to_host += rows.nbytes
         return out
 
     def decode(self, tokens: np.ndarray, positions: np.ndarray) -> DecodeRows:
@@ -312,6 +541,7 @@ class CloudEngine:
 
         Returns fused last-token rows (argmax + top-k support)."""
         self._calls["decode"] += 1
+        self._ensure_blocks(positions)
         self._specializations.add(("decode", 1))
         (tok, tk_i, tk_v), self.cache = _call_donated(
             self._decode, self.params, self.cache,
@@ -328,6 +558,7 @@ class CloudEngine:
         """Pre-fusion semantics: round-trip the full (max_slots, C, V)
         logits as host float32.  Bench baseline + identity tests."""
         self._calls["feed_logits"] += 1
+        self._ensure_blocks(positions)
         parts = []
         for off, w in self._chunks(tokens.shape[1]):
             sl = slice(off, off + w)
@@ -346,6 +577,7 @@ class CloudEngine:
                       positions: np.ndarray) -> np.ndarray:
         """Pre-fusion decode: full last-token logits (max_slots, V)."""
         self._calls["decode_logits"] += 1
+        self._ensure_blocks(positions)
         self._specializations.add(("raw_decode", 1))
         logits, self.cache = _call_donated(
             self._raw_decode, self.params, self.cache,

@@ -72,6 +72,12 @@ class VerifyRequest:
     sampling: str = "greedy"
     start_pos: int = 0            # absolute position of uncached[0]
     arrival_ms: float = 0.0       # absolute arrival on the shared clock
+    # full accepted stream (prompt + output).  When given, the request is
+    # *restartable*: if its slot is preempted (paged pool dry), the
+    # scheduler rewinds the request and re-derives ``uncached`` from the
+    # new cache frontier (a from-scratch partial prefill) instead of
+    # aborting the stream.  CloudClient always supplies it.
+    seq: np.ndarray | None = None
     # internal
     fed: int = 0
     rows: list = field(default_factory=list)
@@ -103,7 +109,9 @@ class VerificationAwareScheduler:
         self.prefill_q: deque[PrefillRequest] = deque()
         self.verify_q: deque[VerifyRequest] = deque()
         self.active_verify: list[VerifyRequest] = []
-        self.free_slots = list(range(engine.max_slots))
+        # FIFO: released slots go to the back so churn round-robins over
+        # the physical batch rows instead of one slot absorbing it all
+        self.free_slots: deque[int] = deque(range(engine.max_slots))
         self.cloud_len = np.zeros(engine.max_slots, np.int64)
         self.last_row: dict[int, np.ndarray] = {}  # slot -> last prefill row
         self.iterations = 0           # iterations that executed a batch
@@ -112,6 +120,17 @@ class VerificationAwareScheduler:
         self.verify_occupancy: list[int] = []  # slots packed per verify iter
         self.verify_tokens_fed: list[int] = []  # tokens packed per verify iter
         self._req_counter = 0
+        # paged-cache policy state: admission order (for youngest-first
+        # preemption) and preemption telemetry
+        self.slot_age = np.full(engine.max_slots, -1, np.int64)
+        self._admit_counter = 0
+        self.preemptions = 0
+        self.preempted_refed_tokens = 0
+        # consecutive verify iterations that deferred EVERY chunk with
+        # nothing evicted and nothing else executing — a growing streak
+        # means no stream can ever free blocks (all holders
+        # non-restartable), which must fail loudly, not spin the clock
+        self._defer_streak = 0
 
     @property
     def sim_ms(self) -> float:
@@ -146,7 +165,8 @@ class VerificationAwareScheduler:
     def release_slot(self, slot: int):
         self.engine.reset_slot(slot)
         self.cloud_len[slot] = 0
-        self.free_slots.append(slot)
+        self.slot_age[slot] = -1
+        self.free_slots.append(slot)   # FIFO: reuse round-robins over rows
 
     def has_work(self) -> bool:
         return bool(self.prefill_q or self.verify_q or self.active_verify)
@@ -186,18 +206,44 @@ class VerificationAwareScheduler:
 
     # -- prefill (lines 5-11) ------------------------------------------
     def _prefill_iteration(self, now: float) -> list[SchedulerEvent]:
+        alloc = getattr(self.engine, "allocator", None)
+        avail_blocks = alloc.free_blocks if alloc is not None else 0
+        blocks_exhausted = False
         batch: list[PrefillRequest] = []
         rest: deque[PrefillRequest] = deque()
         while self.prefill_q:
             req = self.prefill_q.popleft()
-            if req.arrival_ms > now or not self.free_slots:
+            # admission is memory-bound on a paged engine: a free batch
+            # row AND enough free blocks for the prompt; on dense the
+            # slot row is the only resource.  Once one arrived request
+            # is deferred for blocks, later (block-needing) requests are
+            # too — FCFS, so a steady stream of small prompts cannot
+            # starve a large one
+            need = (alloc.blocks_for(len(req.tokens))
+                    if alloc is not None else 0)
+            if need > (alloc.n_blocks if alloc is not None else 0) > 0:
+                # can never be satisfied, not even by draining the pool:
+                # fail with the sizing contract instead of stalling
+                raise RuntimeError(
+                    f"paged KV pool too small for prompt of "
+                    f"{len(req.tokens)} tokens: needs {need} blocks, "
+                    f"pool has {alloc.n_blocks} total (block_size="
+                    f"{alloc.block_size}) — grow pool_blocks")
+            if need > avail_blocks and req.arrival_ms <= now:
+                blocks_exhausted = True
+            if (req.arrival_ms > now or not self.free_slots
+                    or (blocks_exhausted and need > 0)):
                 rest.append(req)
                 continue
-            req.slot = self.free_slots.pop()
+            avail_blocks -= need
+            req.slot = self.free_slots.popleft()
+            self._admit_counter += 1
+            self.slot_age[req.slot] = self._admit_counter
             batch.append(req)
         self.prefill_q = rest
         if not batch:
             return []  # wait for a free slot
+        self._defer_streak = 0         # admission is forward progress
 
         B = self.engine.max_slots
         C = max(len(r.tokens) for r in batch)
@@ -278,6 +324,13 @@ class VerificationAwareScheduler:
 
         if not feeding:
             return None
+        if not self._reserve_blocks(feeding, tokens, positions, targets,
+                                    sel_idx, kept):
+            # every admissible chunk was preempted away: charge the
+            # scheduling work so the shared clock (and the server's
+            # stall detector) sees progress, and retry next iteration
+            self.clock.advance(self.latency.ms_scheduler)
+            return None
         b0 = getattr(self.engine, "bytes_to_host", 0)
         if self.fused:
             need_dists = any(r.sampling != "greedy" for r, _, _ in feeding)
@@ -318,6 +371,134 @@ class VerificationAwareScheduler:
         self.active_verify = [r for r in self.active_verify
                               if r.fed < len(r.uncached) + len(r.draft)]
         return events
+
+    # -- paged-pool admission + preemption ------------------------------
+    def _reserve_blocks(self, feeding, tokens, positions, targets,
+                        sel_idx, kept) -> bool:
+        """Memory admission for one verify iteration on a paged engine.
+
+        Ensures the block pool can supply every feeding slot's growth;
+        when it cannot, the *youngest* block-holding stream is preempted
+        (recompute-style eviction: its blocks return to the pool, its
+        cloud frontier rewinds to zero, and its pending requests restart
+        as from-scratch partial prefills — re-derived from ``req.seq``
+        the next time they are fed).  The oldest block holder is never
+        evicted, which guarantees forward progress.  Returns False when
+        the eviction emptied the feeding set (retry next iteration);
+        no-op (True) on dense engines.
+        """
+        alloc = getattr(self.engine, "allocator", None)
+        if alloc is None:
+            return True
+
+        def demand(entry):
+            req, fed0, n = entry
+            upto = min(req.start_pos + fed0 + n, self.engine.s_max)
+            return alloc.needed(req.slot, upto)
+
+        evicted = False
+        while feeding:
+            if sum(demand(e) for e in feeding) <= alloc.free_blocks:
+                self._defer_streak = 0
+                return True
+            victim = self._pick_victim()
+            if victim is not None:
+                self._preempt_slot(victim, feeding, tokens, positions,
+                                   targets, sel_idx, kept)
+                evicted = True
+                continue
+            # No evictable stream (the only holder is protected or not
+            # restartable): defer the youngest feeding chunk that
+            # actually needs blocks — zero-demand chunks write into
+            # their last partial block and can always proceed (and
+            # finishing them is what releases blocks).  The deferred
+            # request stays queued untouched.
+            needy = [e for e in feeding if demand(e) > 0]
+            entry = max(needy, key=lambda e: self.slot_age[e[0].slot])
+            req = entry[0]
+            own = int(alloc.n_blocks_of[req.slot])
+            if len(feeding) == 1 and alloc.used_blocks == own:
+                raise RuntimeError(
+                    f"paged KV pool too small for a single stream: chunk "
+                    f"needs {demand(entry)} blocks beyond the {own} it "
+                    f"holds, pool has {alloc.free_blocks}/"
+                    f"{alloc.n_blocks} free (block_size="
+                    f"{alloc.block_size}) — grow pool_blocks")
+            self._withdraw(entry, feeding, tokens, positions, targets,
+                           sel_idx, kept)
+        # the whole batch was deferred: legitimate while other work
+        # (or an eviction) can still free blocks, but an unbroken
+        # streak of all-deferred iterations means nothing ever will —
+        # every reserve success, eviction, or executed batch resets it
+        self._defer_streak = 0 if evicted else self._defer_streak + 1
+        if self._defer_streak > 4 * self.engine.max_slots + 16:
+            raise RuntimeError(
+                f"paged KV pool deadlocked: every verify chunk deferred "
+                f"for {self._defer_streak} consecutive iterations with "
+                f"no evictable stream ({alloc.free_blocks}/"
+                f"{alloc.n_blocks} blocks free, block_size="
+                f"{alloc.block_size}).  Streams submitted without "
+                f"VerifyRequest.seq cannot be preempted — grow "
+                f"pool_blocks or supply seq")
+        return False
+
+    @staticmethod
+    def _withdraw(entry, feeding, tokens, positions, targets, sel_idx,
+                  kept) -> None:
+        """Pull one chunk out of the current batch without touching its
+        request state — it simply waits for a later iteration."""
+        slot = entry[0].slot
+        tokens[slot, :] = 0
+        positions[slot, :] = -1
+        targets[slot, :] = -1
+        sel_idx[slot, :] = -1
+        kept.pop(slot, None)
+        feeding.remove(entry)
+
+    def _slot_restartable(self, slot: int) -> bool:
+        """A slot can be preempted only if every pending request for it
+        carries the full accepted stream (``seq``) so the scheduler can
+        re-derive the partial prefill from a cold cache."""
+        return all(r.seq is not None
+                   for r in list(self.active_verify) + list(self.verify_q)
+                   if r.slot == slot)
+
+    def _pick_victim(self) -> int | None:
+        """Youngest (most recently admitted) block-holding slot, never
+        the oldest holder, and only restartable streams."""
+        alloc = self.engine.allocator
+        holders = [s for s in range(self.engine.max_slots)
+                   if alloc.n_blocks_of[s] > 0]
+        if len(holders) <= 1:
+            return None
+        oldest = min(holders, key=lambda s: self.slot_age[s])
+        cands = [s for s in holders
+                 if s != oldest and self._slot_restartable(s)]
+        if not cands:
+            return None
+        return max(cands, key=lambda s: self.slot_age[s])
+
+    def _preempt_slot(self, slot: int, feeding, tokens, positions,
+                      targets, sel_idx, kept) -> None:
+        """Evict ``slot``: blocks back to the pool, cloud frontier to 0,
+        pending requests rewound to refeed from scratch; if the slot was
+        in the current batch, its chunk is withdrawn."""
+        self.engine.reset_slot(slot)            # frees + invalidates blocks
+        self.cloud_len[slot] = 0
+        self.last_row.pop(slot, None)
+        for r in list(self.active_verify) + list(self.verify_q):
+            if r.slot == slot:
+                self.preempted_refed_tokens += r.start_pos + r.fed
+                r.fed = 0
+                r.rows = []
+                r.start_pos = 0
+                r.uncached = np.asarray(r.seq, np.int64)
+        for entry in feeding:
+            if entry[0].slot == slot:
+                self._withdraw(entry, feeding, tokens, positions, targets,
+                               sel_idx, kept)
+                break
+        self.preemptions += 1
 
     def _finish_verify(self, req: VerifyRequest) -> SchedulerEvent:
         gamma = len(req.draft)

@@ -40,7 +40,7 @@ special case and reproduces it metric-for-metric.
 from __future__ import annotations
 
 from collections import deque
-from dataclasses import dataclass, field
+from dataclasses import asdict, dataclass, field
 
 from repro.serving.device import CloudReply, DeviceRuntime
 from repro.serving.engine import CloudEngine
@@ -52,6 +52,41 @@ RUNNING = "running"
 WAIT_SLOT = "wait_slot"    # verify ready but prompt prefill not yet done
 WAIT_CLOUD = "wait_cloud"  # verify in flight
 DONE = "done"
+
+
+@dataclass
+class ServerStats:
+    """Batching + memory telemetry for one serving run.
+
+    The scheduler counters describe Algorithm-1 packing efficiency; the
+    block-pool fields (meaningful when the engine runs
+    ``cache_impl="paged"``) describe the memory-bound admission state —
+    free/used/peak blocks, bytes actually backing live KV versus the
+    dense reservation, and how many preemptions the pool forced.
+    """
+    iterations: int = 0
+    prefill_iterations: int = 0
+    verify_iterations: int = 0
+    mean_verify_occupancy: float = 0.0
+    max_verify_occupancy: int = 0
+    mean_packed_tokens: float = 0.0
+    sim_ms: float = 0.0
+    waiting_sessions: int = 0          # admitted but not yet holding a slot
+    # -- block pool (paged cache) --
+    cache_impl: str = "dense"
+    block_size: int = 0
+    n_blocks: int = 0
+    free_blocks: int = 0
+    used_blocks: int = 0
+    peak_used_blocks: int = 0
+    kv_cache_bytes: int = 0
+    kv_bytes_in_use: int = 0
+    kv_bytes_peak: int = 0
+    preemptions: int = 0
+    preempted_refed_tokens: int = 0
+
+    def as_dict(self) -> dict:
+        return asdict(self)
 
 
 @dataclass
@@ -232,12 +267,22 @@ class SyneraServer:
         return [s.metrics for s in self.sessions[first:]]
 
     # ------------------------------------------------------------------
-    def stats(self) -> dict:
-        """Batching-efficiency counters from the shared scheduler."""
+    def server_stats(self) -> ServerStats:
+        """Batching-efficiency counters from the shared scheduler plus
+        block-pool utilization from the engine (paged cache)."""
         sched = self.sched
         occ = sched.verify_occupancy
         toks = sched.verify_tokens_fed
-        return dict(
+        pool = self.engine.pool_stats
+        # one count per stream without a slot: sessions parked in
+        # wait_slot and owners of still-queued prompt prefills overlap
+        # (the queued prefill is what wait_slot waits on)
+        waiting_ids = {id(s) for s in self.sessions if s.state == WAIT_SLOT}
+        waiting_ids |= {id(self._by_req[r.req_id][0])
+                        for r in sched.prefill_q
+                        if r.req_id in self._by_req}
+        waiting = len(waiting_ids)
+        return ServerStats(
             iterations=sched.iterations,
             prefill_iterations=sched.prefill_iterations,
             verify_iterations=sched.verify_iterations,
@@ -245,4 +290,20 @@ class SyneraServer:
             max_verify_occupancy=max(occ) if occ else 0,
             mean_packed_tokens=(sum(toks) / len(toks)) if toks else 0.0,
             sim_ms=self.clock.now_ms,
+            waiting_sessions=waiting,
+            cache_impl=pool["cache_impl"],
+            block_size=pool["block_size"],
+            n_blocks=pool["n_blocks"],
+            free_blocks=pool["free_blocks"],
+            used_blocks=pool["used_blocks"],
+            peak_used_blocks=pool["peak_used_blocks"],
+            kv_cache_bytes=pool["kv_cache_bytes"],
+            kv_bytes_in_use=pool["kv_bytes_in_use"],
+            kv_bytes_peak=pool["kv_bytes_peak"],
+            preemptions=sched.preemptions,
+            preempted_refed_tokens=sched.preempted_refed_tokens,
         )
+
+    def stats(self) -> dict:
+        """Dict view of :meth:`server_stats` (the stable extras schema)."""
+        return self.server_stats().as_dict()

@@ -64,11 +64,14 @@ class CloudClient:
         self.last_fed_tokens = len(uncached) + len(draft)
         self.total_fed_tokens += self.last_fed_tokens
         rid = self.sched.next_req_id()
+        # the full accepted stream rides along so a paged-pool preemption
+        # can restart the request as a from-scratch partial prefill
         self.sched.submit_verify(VerifyRequest(
             rid, self.slot, uncached=uncached,
             draft=np.asarray(draft, np.int64),
             q_sparse=[(d.idx, d.val) for d in dists],
-            sampling=self.sampling, arrival_ms=arrival_ms))
+            sampling=self.sampling, arrival_ms=arrival_ms,
+            seq=np.asarray(seq, np.int64)))
         return rid
 
     def on_event(self, ev) -> None:

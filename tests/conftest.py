@@ -46,15 +46,21 @@ except ImportError:
 
     def _given(*strats, **kwstrats):
         def deco(fn):
+            # positional strategies bind to the RIGHTMOST parameters
+            # (hypothesis semantics), so drawn values must be passed by
+            # name — tests mixing pytest fixtures with @given rely on it
+            names = list(inspect.signature(fn).parameters)
+            drawn = names[len(names) - len(strats):] if strats else []
+
             @functools.wraps(fn)
             def wrapper(*args, **kwargs):
                 n = getattr(wrapper, "_stub_max_examples",
                             getattr(fn, "_stub_max_examples", 20))
                 rng = random.Random(zlib.crc32(fn.__qualname__.encode()))
                 for _ in range(n):
-                    vals = [s._draw(rng) for s in strats]
+                    vals = dict(zip(drawn, (s._draw(rng) for s in strats)))
                     kvals = {k: s._draw(rng) for k, s in kwstrats.items()}
-                    fn(*args, *vals, **kwargs, **kvals)
+                    fn(*args, **kwargs, **vals, **kvals)
             # hide the drawn parameters from pytest so it does not try
             # to resolve them as fixtures (real hypothesis does the same)
             sig = inspect.signature(fn)

@@ -8,10 +8,11 @@ import pytest
 
 from repro.kernels.attn_importance.attn_importance import attn_with_importance
 from repro.kernels.attn_importance.ref import attn_with_importance_ref
-from repro.kernels.decode_gqa.decode_gqa import decode_attention
+from repro.kernels.decode_gqa.decode_gqa import (decode_attention,
+                                                 decode_attention_paged)
 from repro.kernels.decode_gqa.ref import decode_attention_ref
 from repro.kernels.partial_prefill.partial_prefill import (
-    partial_prefill_attention)
+    partial_prefill_attention, partial_prefill_attention_paged)
 from repro.kernels.partial_prefill.ref import partial_prefill_ref
 from repro.kernels.ssd_scan.ssd_scan import ssd_scan
 from repro.kernels.ssd_scan.ref import ssd_scan_ref, ssd_sequential_ref
@@ -103,6 +104,85 @@ def test_decode_gqa(B, S, nh, nkv, hd, window, dtype):
                               window=window)
     np.testing.assert_allclose(np.asarray(o1, np.float32),
                                np.asarray(o2, np.float32), **TOL[dtype])
+
+
+# ---------------------------------------------------------------------------
+# Block-table (paged) kernel variants: random block tables over a shared
+# pool, dense oracle derived by gathering the pool through the tables.
+# ---------------------------------------------------------------------------
+
+def _random_paged_cache(rng, B, nb, bs, mbps, nkv, hd, lens, dtype):
+    """Random pool + permuted tables backing ``lens[b]``-token slots,
+    plus the gathered dense-equivalent view."""
+    kp = jax.random.normal(jax.random.PRNGKey(7), (nb, bs, nkv, hd), dtype)
+    vp = jax.random.normal(jax.random.PRNGKey(8), (nb, bs, nkv, hd), dtype)
+    pos = np.full((nb, bs), -1, np.int32)
+    bt = np.full((B, mbps), -1, np.int32)
+    free = list(rng.permutation(nb))
+    for b, L in enumerate(lens):
+        for j in range(-(-L // bs)):
+            blk = free.pop()
+            bt[b, j] = blk
+            valid = min(bs, L - j * bs)
+            pos[blk, :valid] = j * bs + np.arange(valid)
+    pos, bt = jnp.asarray(pos), jnp.asarray(bt)
+    btc = jnp.where(bt < 0, nb, bt)
+    s_max = mbps * bs
+    kd = jnp.take(kp, btc, axis=0, mode="fill",
+                  fill_value=0).reshape(B, s_max, nkv, hd)
+    vd = jnp.take(vp, btc, axis=0, mode="fill",
+                  fill_value=0).reshape(B, s_max, nkv, hd)
+    posd = jnp.take(pos, btc, axis=0, mode="fill",
+                    fill_value=-1).reshape(B, s_max)
+    return kp, vp, pos, bt, kd, vd, posd
+
+
+@pytest.mark.parametrize("B,nb,bs,mbps,nh,nkv,hd,window", [
+    (3, 24, 8, 6, 4, 2, 32, 0),
+    (2, 12, 16, 4, 8, 8, 64, 0),
+    (2, 40, 8, 8, 4, 1, 16, 24),    # MQA + sliding window
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_gqa_paged(B, nb, bs, mbps, nh, nkv, hd, window, dtype):
+    rng = np.random.default_rng(11)
+    lens = [int(rng.integers(2, mbps * bs)) for _ in range(B)]
+    kp, vp, pos, bt, kd, vd, posd = _random_paged_cache(
+        rng, B, nb, bs, mbps, nkv, hd, lens, dtype)
+    q = jax.random.normal(jax.random.PRNGKey(9), (B, nh, hd), dtype)
+    qp = jnp.asarray([L - 1 for L in lens], jnp.int32)
+    o1 = decode_attention_paged(q, kp, vp, qp, pos, bt, window=window)
+    o2 = decode_attention_ref(q, kd, vd, qp, posd, window=window)
+    np.testing.assert_allclose(np.asarray(o1, np.float32),
+                               np.asarray(o2, np.float32), **TOL[dtype])
+
+
+@pytest.mark.parametrize("B,C,nb,bs,mbps,nh,nkv,hd,window", [
+    (2, 8, 24, 8, 6, 4, 2, 32, 0),
+    (1, 16, 12, 16, 4, 8, 8, 64, 0),
+    (2, 4, 40, 8, 8, 4, 1, 16, 24),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_partial_prefill_paged(B, C, nb, bs, mbps, nh, nkv, hd, window,
+                               dtype):
+    rng = np.random.default_rng(13)
+    lens = [int(rng.integers(C + 1, mbps * bs)) for _ in range(B)]
+    kp, vp, pos, bt, kd, vd, posd = _random_paged_cache(
+        rng, B, nb, bs, mbps, nkv, hd, lens, dtype)
+    q = jax.random.normal(jax.random.PRNGKey(10), (B, C, nh, hd), dtype)
+    # chunk queries are the tail of each slot's sequence (already written
+    # to the cache: write-then-attend semantics), ragged via -1 padding
+    qp = np.full((B, C), -1, np.int32)
+    for b in range(B):
+        nq = int(rng.integers(1, C + 1))
+        qp[b, :nq] = lens[b] - nq + np.arange(nq)
+    qp = jnp.asarray(qp)
+    o1 = partial_prefill_attention_paged(q, kp, vp, qp, pos, bt,
+                                         window=window)
+    o2 = partial_prefill_ref(q, kd, vd, qp, posd, window=window)
+    mask = (np.asarray(qp) >= 0)[:, :, None, None]
+    np.testing.assert_allclose(np.asarray(o1, np.float32) * mask,
+                               np.asarray(o2, np.float32) * mask,
+                               **TOL[dtype])
 
 
 @pytest.mark.parametrize("B,L,H,P,N,chunk,use_h0", [

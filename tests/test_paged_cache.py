@@ -1,0 +1,318 @@
+"""Paged KV cache: allocator mechanics, dense/paged byte-identity at the
+engine and serving levels, memory-bound admission, youngest-stream
+preemption, FIFO slot reuse, and slot oversubscription.
+
+The headline property (ISSUE 3 acceptance): greedy token streams under
+``cache_impl="paged"`` are byte-identical to ``"dense"`` across random
+prompt lengths, arrival patterns and block sizes — including when the
+pool runs dry and streams are preempted.
+
+Engines and the device runtime are module-scoped fixtures (jitted steps
+are expensive to recompile, released slots are fully reset — reuse is
+safe; see test_server.py).
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.synera_pair import tiny_pair
+from repro.core.offload import OffloadPolicy
+from repro.models import model as M
+from repro.serving.device import DeviceRuntime
+from repro.serving.engine import BlockAllocator, CloudEngine
+from repro.serving.scheduler import PrefillRequest, VerificationAwareScheduler
+from repro.serving.server import SyneraServer
+from repro.serving import synergy as SY
+
+S_MAX = 256
+
+
+@pytest.fixture(scope="module")
+def pair():
+    slm_cfg, llm_cfg = tiny_pair(vocab=64)
+    slm_p = M.init_params(slm_cfg, jax.random.PRNGKey(0))
+    llm_p = M.init_params(llm_cfg, jax.random.PRNGKey(1))
+    return slm_cfg, slm_p, llm_cfg, llm_p
+
+
+@pytest.fixture(scope="module")
+def dev(pair):
+    slm_cfg, slm_p, _, _ = pair
+    return DeviceRuntime(slm_cfg, slm_p, s_max=S_MAX, gamma=4, seed=0,
+                         policy=OffloadPolicy(mode="all"),
+                         use_early_exit=False, use_pi=False)
+
+
+@pytest.fixture(scope="module")
+def eng_dense(pair):
+    _, _, llm_cfg, llm_p = pair
+    return CloudEngine(llm_cfg, llm_p, max_slots=2, s_max=S_MAX)
+
+
+@pytest.fixture(scope="module")
+def paged_engines(pair):
+    """Paged engines across block sizes, including a deliberately tight
+    pool (forces preemption under concurrent load)."""
+    _, _, llm_cfg, llm_p = pair
+    return [
+        CloudEngine(llm_cfg, llm_p, max_slots=2, s_max=S_MAX,
+                    cache_impl="paged", block_size=4),
+        CloudEngine(llm_cfg, llm_p, max_slots=2, s_max=S_MAX,
+                    cache_impl="paged", block_size=16),
+        CloudEngine(llm_cfg, llm_p, max_slots=2, s_max=S_MAX,
+                    cache_impl="paged", block_size=4, pool_blocks=11),
+    ]
+
+
+def _prompts(lens, seed=5):
+    rng = np.random.default_rng(seed)
+    return [[int(t) for t in rng.integers(1, 60, size=max(L, 2))]
+            for L in lens]
+
+
+# ---------------------------------------------------------------------------
+# BlockAllocator unit behavior
+# ---------------------------------------------------------------------------
+
+def test_allocator_mechanics():
+    a = BlockAllocator(n_blocks=6, block_size=4, max_slots=3,
+                       max_blocks_per_slot=4)
+    assert a.blocks_for(1) == 1 and a.blocks_for(4) == 1
+    assert a.blocks_for(5) == 2
+    assert a.blocks_for(10_000) == 4          # capped at max_bps (window)
+    assert a.extend(0, 7)                     # 2 blocks
+    assert a.extend(1, 9)                     # 3 blocks
+    assert a.free_blocks == 1 and a.used_blocks == 5
+    # all-or-nothing: 2 more blocks for slot 0 cannot be met, no change
+    assert not a.extend(0, 16)
+    assert a.free_blocks == 1 and a.n_blocks_of[0] == 2
+    # growth within the allocation is free
+    assert a.extend(0, 8) and a.n_blocks_of[0] == 2
+    freed = a.release(1)
+    assert len(freed) == 3 and a.free_blocks == 4
+    assert (a.table[1] == -1).all()
+    assert a.peak_used == 5
+    # FIFO recycling: freed blocks come back after the original tail
+    assert a.extend(2, 16)
+    order = list(a.table[2][a.table[2] >= 0])
+    assert order[-len(freed):] == list(freed)
+
+
+def test_paged_init_cache_guards():
+    slm_cfg, _ = tiny_pair(vocab=64)
+    with pytest.raises(ValueError):
+        M.init_cache(slm_cfg, 2, 100, cache_impl="paged", block_size=16)
+    bad = slm_cfg.replace(family="ssm", ssm_state=16)
+    with pytest.raises(ValueError):
+        M.init_cache(bad, 2, 256, cache_impl="paged")
+
+
+# ---------------------------------------------------------------------------
+# Engine-level byte-identity (prefill / feed / decode / reset_slot)
+# ---------------------------------------------------------------------------
+
+def _drive_engine(eng):
+    rng = np.random.default_rng(3)
+    B, R = eng.max_slots, eng.verify_rows_max
+    out = []
+    tokens = np.zeros((B, 12), np.int32)
+    positions = np.full((B, 12), -1, np.int32)
+    tokens[0, :8] = rng.integers(1, 60, 8)
+    positions[0, :8] = np.arange(8)
+    tokens[1, :12] = rng.integers(1, 60, 12)
+    positions[1, :12] = np.arange(12)
+    out.append(eng.prefill(tokens, positions))
+    t2 = np.zeros((B, 6), np.int32)
+    p2 = np.full((B, 6), -1, np.int32)
+    tg = np.full((B, 6), -1, np.int32)
+    sel = np.full((B, R), -1, np.int32)
+    t2[0] = rng.integers(1, 60, 6)
+    p2[0] = 8 + np.arange(6)
+    t2[1] = rng.integers(1, 60, 6)
+    p2[1] = 12 + np.arange(6)
+    tg[:, :5] = t2[:, 1:]
+    sel[:, :3] = [3, 4, 5]
+    rows = eng.feed(t2, p2, tg, sel, need_dists=True)
+    out += [rows.token_id, rows.p_draft, rows.topk_idx, rows.topk_val]
+    td = np.zeros((B, 1), np.int32)
+    pd = np.full((B, 1), -1, np.int32)
+    td[0, 0], pd[0, 0] = 5, 14
+    d = eng.decode(td, pd)
+    out += [d.token_id, d.topk_idx, d.topk_val]
+    eng.reset_slot(1)
+    t3 = np.zeros((B, 4), np.int32)
+    p3 = np.full((B, 4), -1, np.int32)
+    t3[1] = rng.integers(1, 60, 4)
+    p3[1] = np.arange(4)
+    out.append(eng.prefill(t3, p3))
+    eng.reset_slot(0)
+    eng.reset_slot(1)
+    return out
+
+
+def test_engine_paged_dense_identity(pair):
+    """Every engine output (prefill rows, fused verify rows, decode rows,
+    post-reset re-prefill) is byte-identical between cache layouts."""
+    _, _, llm_cfg, llm_p = pair
+    eng_d = CloudEngine(llm_cfg, llm_p, max_slots=2, s_max=64)
+    eng_p = CloudEngine(llm_cfg, llm_p, max_slots=2, s_max=64,
+                        cache_impl="paged", block_size=8, pool_blocks=12)
+    for i, (a, b) in enumerate(zip(_drive_engine(eng_d),
+                                   _drive_engine(eng_p))):
+        assert np.array_equal(np.asarray(a), np.asarray(b)), f"output {i}"
+    assert eng_p.allocator.used_blocks == 0      # resets returned the pool
+    assert eng_p.pool_stats["peak_used_blocks"] > 0
+
+
+# ---------------------------------------------------------------------------
+# Serving-level equivalence (the acceptance property)
+# ---------------------------------------------------------------------------
+
+@given(st.lists(st.integers(4, 20), min_size=1, max_size=3),
+       st.integers(0, 2),        # which paged engine (block size / pool)
+       st.integers(0, 1))        # arrival pattern: together | staggered
+@settings(max_examples=5, deadline=None)
+def test_paged_matches_dense_streams(dev, eng_dense, paged_engines,
+                                     lens, eng_i, arr_i):
+    """Greedy token streams under cache_impl='paged' are byte-identical
+    to 'dense' across prompt lengths, arrival patterns and block sizes
+    (tight-pool engine 2 adds forced preemption to the mix)."""
+    prompts = _prompts(lens, seed=sum(lens) + 7 * len(lens))
+    arrivals = None if arr_i == 0 else [i * 350.0 for i
+                                        in range(len(prompts))]
+    r_ref = SY.run_synera(dev, eng_dense, prompts, 10, concurrency=1)
+    r_pg = SY.run_synera(dev, paged_engines[eng_i], prompts, 10,
+                         concurrency=len(prompts), arrivals=arrivals)
+    assert r_pg.outputs == r_ref.outputs
+    st_ = r_pg.extras["scheduler"]
+    assert st_["cache_impl"] == "paged"
+    assert st_["used_blocks"] == 0               # fully drained at the end
+
+
+def test_forced_preemption_keeps_streams_identical(dev, eng_dense,
+                                                   paged_engines):
+    """A pool too small for two full streams forces youngest-stream
+    preemption; evicted streams refeed from scratch and the final token
+    streams stay byte-identical to the dense run."""
+    eng_tight = paged_engines[2]                 # 11 blocks of 4 tokens
+    prompts = _prompts([8, 8, 8, 8], seed=29)
+    r_ref = SY.run_synera(dev, eng_dense, prompts, 12, concurrency=1)
+    r_pg = SY.run_synera(dev, eng_tight, prompts, 12, concurrency=4)
+    assert r_pg.outputs == r_ref.outputs
+    st_ = r_pg.extras["scheduler"]
+    assert st_["preemptions"] >= 1
+    assert st_["preempted_refed_tokens"] > 0
+    assert st_["used_blocks"] == 0
+    assert eng_tight.allocator.free_blocks == eng_tight.allocator.n_blocks
+
+
+def test_paged_serves_4x_slots_oversubscribed(dev, eng_dense, pair):
+    """Acceptance: a paged engine serves >= 4x max_slots concurrent
+    greedy streams (waiting-queue admission) with token streams
+    byte-identical to the dense path, while its peak memory stays well
+    under the dense reservation."""
+    _, _, llm_cfg, llm_p = pair
+    eng_p = CloudEngine(llm_cfg, llm_p, max_slots=2, s_max=S_MAX,
+                        cache_impl="paged", block_size=8)
+    prompts = _prompts([8] * 8, seed=41)          # 8 streams on 2 slots
+    r_ref = SY.run_synera(dev, eng_dense, prompts, 12, concurrency=1)
+    r_pg = SY.run_synera(dev, eng_p, prompts, 12, concurrency=8)
+    assert r_pg.outputs == r_ref.outputs
+    st_ = r_pg.extras["scheduler"]
+    # memory bound: peak live KV is a fraction of the dense reservation
+    assert st_["kv_bytes_peak"] * 2 < st_["kv_cache_bytes"]
+    assert st_["max_verify_occupancy"] >= 2      # batching still happens
+
+
+def test_block_admission_gates_prefill(pair):
+    """Prefill admission on a paged engine checks free *blocks*: with
+    free slots but a dry pool the prompt stays queued, and is admitted
+    once another stream releases its blocks."""
+    _, _, llm_cfg, llm_p = pair
+    eng = CloudEngine(llm_cfg, llm_p, max_slots=4, s_max=64,
+                      cache_impl="paged", block_size=4, pool_blocks=5)
+    sched = VerificationAwareScheduler(eng, chunk=8)
+    for rid in (1, 2, 3):                        # 8-token prompts: 2 blocks
+        sched.submit_prefill(PrefillRequest(rid, np.arange(1, 9)))
+    evs = sched.run_iteration()
+    assert sorted(e.req_id for e in evs) == [1, 2]   # 4 of 5 blocks used
+    assert len(sched.free_slots) == 2            # slots were NOT the limit
+    assert len(sched.prefill_q) == 1
+    sched.release_slot(evs[0].slot)
+    evs = sched.run_iteration()
+    assert [e.req_id for e in evs] == [3]
+    for s in range(eng.max_slots):
+        if eng.allocator.n_blocks_of[s] > 0:
+            sched.release_slot(s)
+    assert eng.allocator.used_blocks == 0
+
+
+def test_prefill_rejects_prompt_larger_than_pool(pair):
+    """A prompt that could never fit even a drained pool fails loudly
+    with the sizing contract instead of deferring forever."""
+    _, _, llm_cfg, llm_p = pair
+    eng = CloudEngine(llm_cfg, llm_p, max_slots=2, s_max=64,
+                      cache_impl="paged", block_size=4, pool_blocks=2)
+    sched = VerificationAwareScheduler(eng, chunk=8)
+    sched.submit_prefill(PrefillRequest(1, np.arange(1, 33)))  # 8 > 2 blocks
+    with pytest.raises(RuntimeError, match="pool too small"):
+        sched.run_iteration()
+
+
+def test_prefill_block_admission_is_fcfs(pair):
+    """A prompt deferred for lack of blocks must not be bypassed by
+    later-arriving smaller prompts — otherwise a steady small-prompt
+    stream starves the large one indefinitely."""
+    _, _, llm_cfg, llm_p = pair
+    eng = CloudEngine(llm_cfg, llm_p, max_slots=4, s_max=64,
+                      cache_impl="paged", block_size=4, pool_blocks=6)
+    sched = VerificationAwareScheduler(eng, chunk=8)
+    sched.submit_prefill(PrefillRequest(1, np.arange(1, 9)))     # 2 blocks
+    assert [e.req_id for e in sched.run_iteration()] == [1]
+    sched.submit_prefill(PrefillRequest(2, np.arange(1, 25)))    # 6 blocks
+    sched.submit_prefill(PrefillRequest(3, np.arange(1, 5)))     # 1 block
+    assert sched.run_iteration() == []          # 3 must wait behind 2
+    assert len(sched.prefill_q) == 2
+    sched.release_slot(0)                       # now 6 blocks free
+    evs = sched.run_iteration()
+    assert [e.req_id for e in evs] == [2]       # FCFS; 3 still queued
+    sched.release_slot(evs[0].slot)
+    assert [e.req_id for e in sched.run_iteration()] == [3]
+    for s in range(eng.max_slots):
+        if eng.allocator.n_blocks_of[s] > 0:
+            sched.release_slot(s)
+
+
+# ---------------------------------------------------------------------------
+# FIFO slot reuse (regression: LIFO free-list made one slot absorb all
+# churn)
+# ---------------------------------------------------------------------------
+
+def test_slot_reuse_round_robins(dev, pair):
+    """Sequential sessions on a 2-slot engine must round-robin over both
+    physical rows ([0, 1, 0, 1]), not hammer one slot."""
+    _, _, llm_cfg, llm_p = pair
+    eng = CloudEngine(llm_cfg, llm_p, max_slots=2, s_max=S_MAX)
+    server = SyneraServer(dev, eng)
+    server.serve(_prompts([8, 8, 8, 8], seed=47), 8, concurrency=1)
+    used = [slot for s in server.sessions for slot in s.slots_used]
+    assert used == [0, 1, 0, 1]
+
+
+def test_slot_reuse_round_robins_staggered(dev, pair):
+    """Same property under staggered arrivals with overlap: releases go
+    to the back of the FIFO, so reuse alternates instead of popping the
+    most recently freed row every time."""
+    _, _, llm_cfg, llm_p = pair
+    eng = CloudEngine(llm_cfg, llm_p, max_slots=2, s_max=S_MAX)
+    server = SyneraServer(dev, eng)
+    server.serve(_prompts([8, 8, 8, 8, 8, 8], seed=53), 8,
+                 concurrency=None,
+                 arrivals=[0.0, 2000.0, 4000.0, 6000.0, 8000.0, 10000.0])
+    used = [slot for s in server.sessions for slot in s.slots_used]
+    assert len(used) == 6
+    # strictly sequential arrivals + FIFO recycling => alternating rows
+    assert used == [0, 1, 0, 1, 0, 1]
