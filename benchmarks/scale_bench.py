@@ -2,7 +2,7 @@
 verifier under the SyneraServer event loop (ROADMAP: heavy traffic /
 batching / async).
 
-Two sweeps:
+Three sweeps:
 
 1. **Batching sweep** (``rows``): for each stream count the same request
    set is served twice on a fresh slot state: sequentially
@@ -23,10 +23,23 @@ Two sweeps:
    regardless of live lengths, the paged engine's footprint is its
    peak block usage — reported as *cache bytes per served token*.
 
+3. **Shared-prefix sweep** (``shared_prefix_sweep``): N concurrent
+   streams whose prompts share a long common system prefix, served on a
+   paged engine with and without ``share_prefix``.  Outputs are asserted
+   byte-identical (and identical to dense); what changes is peak pool
+   usage — the common prefix's full blocks are allocated once and
+   ref-counted into every stream's block table instead of once per
+   stream.
+
 Usage:
   PYTHONPATH=src:. python -m benchmarks.scale_bench [--fast] \
       [--streams 1,2,4,8] [--concurrency 8,32,128] \
+      [--shared-streams 4,8] [--prefix-blocks 4] \
       [--out benchmarks/BENCH_scale.json]
+
+Skipped sweeps ('' as the list) keep their previously written section
+in the output JSON, so one sweep can be refreshed without re-running
+the others.
 """
 from __future__ import annotations
 
@@ -167,6 +180,94 @@ def run_cache_sweep(concurrency=(8, 32, 128), max_new: int = 8,
                 rows=rows)
 
 
+def run_shared_prefix_sweep(streams=(4, 8), max_new: int = 8,
+                            slots: int = 8, block_size: int = 8,
+                            prefix_blocks: int = 4,
+                            suffix_tokens: int = 8) -> dict:
+    """Prefix-sharing on/off at full-slot concurrency with a common
+    system prompt of ``prefix_blocks`` full blocks per stream.
+
+    The sharing run must dedupe exactly those blocks across the
+    co-resident streams: peak pool usage drops by
+    ``prefix_blocks x (streams - 1)`` (asserted as a >= bound; outputs
+    asserted byte-identical to the non-sharing paged run and to dense).
+    """
+    from benchmarks import paper_claims as PC
+    from benchmarks.prepare import get_pair
+    from repro.core.offload import OffloadPolicy
+    from repro.serving import synergy as SY
+
+    slm_cfg, slm_p, llm_cfg, llm_p, task = get_pair()
+    dev = PC.make_device(slm_cfg, slm_p,
+                         policy=OffloadPolicy(mode="all"),
+                         use_early_exit=False)
+    rng = np.random.default_rng(37)
+    vocab = slm_cfg.vocab
+    common = [int(t) for t in rng.integers(1, vocab - 1,
+                                           prefix_blocks * block_size)]
+
+    rows = []
+    for n in streams:
+        prompts = [common + [int(t) for t in rng.integers(1, vocab - 1,
+                                                          suffix_tokens)]
+                   for _ in range(n)]
+        conc = min(n, slots)
+
+        eng_d = PC.make_engine(llm_cfg, llm_p, slots=slots)
+        r_d = SY.run_synera(dev, eng_d, prompts, max_new, concurrency=conc)
+
+        eng_off = PC.make_engine(llm_cfg, llm_p, slots=slots,
+                                 cache_impl="paged", block_size=block_size)
+        t0 = time.time()
+        r_off = SY.run_synera(dev, eng_off, prompts, max_new,
+                              concurrency=conc)
+        t_off = time.time() - t0
+        st_off = r_off.extras["scheduler"]
+
+        eng_on = PC.make_engine(llm_cfg, llm_p, slots=slots,
+                                cache_impl="paged", block_size=block_size,
+                                share_prefix=True)
+        t0 = time.time()
+        r_on = SY.run_synera(dev, eng_on, prompts, max_new,
+                             concurrency=conc)
+        t_on = time.time() - t0
+        st_on = r_on.extras["scheduler"]
+
+        assert r_off.outputs == r_d.outputs, \
+            "paged serving must not change greedy token streams"
+        assert r_on.outputs == r_d.outputs, \
+            "prefix sharing must not change greedy token streams"
+        saved = st_off["peak_used_blocks"] - st_on["peak_used_blocks"]
+        assert saved >= prefix_blocks * (conc - 1), (st_off, st_on)
+
+        rows.append(dict(
+            streams=n,
+            concurrency=conc,
+            prefix_tokens=len(common),
+            prefix_blocks=prefix_blocks,
+            peak_used_blocks_noshare=st_off["peak_used_blocks"],
+            peak_used_blocks_share=st_on["peak_used_blocks"],
+            saved_peak_blocks=saved,
+            dedupe_hit_blocks=st_on["dedupe_hit_blocks"],
+            cow_copies=st_on["cow_copies"],
+            kv_bytes_peak_noshare=st_off["kv_bytes_peak"],
+            kv_bytes_peak_share=st_on["kv_bytes_peak"],
+            prefill_iterations=st_on["prefill_iterations"],
+            makespan_noshare_ms=st_off["sim_ms"],
+            makespan_share_ms=st_on["sim_ms"],
+            wall_s_noshare=t_off,
+            wall_s_share=t_on,
+        ))
+        print(f"streams={n:3d} peak_blocks {st_off['peak_used_blocks']}"
+              f"->{st_on['peak_used_blocks']} (saved {saved}, "
+              f">= {prefix_blocks * (conc - 1)} required) "
+              f"dedupe={st_on['dedupe_hit_blocks']} "
+              f"cow={st_on['cow_copies']}", flush=True)
+    return dict(slots=slots, max_new=max_new, block_size=block_size,
+                prefix_blocks=prefix_blocks, suffix_tokens=suffix_tokens,
+                rows=rows)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
@@ -174,18 +275,38 @@ def main():
     ap.add_argument("--concurrency", default="8,32,128",
                     help="stream counts for the dense-vs-paged cache "
                          "sweep ('' to skip)")
+    ap.add_argument("--shared-streams", default="4,8",
+                    help="stream counts for the shared-prefix sweep "
+                         "('' to skip)")
+    ap.add_argument("--prefix-blocks", type=int, default=4,
+                    help="common system-prefix length in full KV blocks")
     ap.add_argument("--slots", type=int, default=8)
     ap.add_argument("--block-size", type=int, default=8)
     ap.add_argument("--out", default="benchmarks/BENCH_scale.json")
     args = ap.parse_args()
-    streams = tuple(int(s) for s in args.streams.split(","))
-    res = run_sweep(streams=streams, max_new=16 if args.fast else 32,
-                    slots=args.slots)
+    # skipped sweeps keep their previously written section
+    res = {}
+    try:
+        with open(args.out) as f:
+            res = json.load(f)
+    except (OSError, ValueError):
+        pass
+    if args.streams:
+        streams = tuple(int(s) for s in args.streams.split(","))
+        res.update(run_sweep(streams=streams,
+                             max_new=16 if args.fast else 32,
+                             slots=args.slots))
     if args.concurrency:
         conc = tuple(int(s) for s in args.concurrency.split(","))
         res["cache_sweep"] = run_cache_sweep(
             concurrency=conc, max_new=4 if args.fast else 8,
             slots=args.slots, block_size=args.block_size)
+    if args.shared_streams:
+        shared = tuple(int(s) for s in args.shared_streams.split(","))
+        res["shared_prefix_sweep"] = run_shared_prefix_sweep(
+            streams=shared, max_new=4 if args.fast else 8,
+            slots=args.slots, block_size=args.block_size,
+            prefix_blocks=args.prefix_blocks)
     with open(args.out, "w") as f:
         json.dump(res, f, indent=2)
     print(f"wrote {args.out}")

@@ -104,6 +104,10 @@ class ModelConfig:
     # lengths and admission is bound by free blocks, not slot count.
     cache_impl: str = "dense"    # "dense" | "paged"
     kv_block_size: int = 16      # tokens per KV block when cache_impl="paged"
+    # Prefix sharing (paged only): dedupe identical leading full prompt
+    # blocks across slots via ref-counted blocks; divergent writes into a
+    # shared block fork a private copy (copy-on-write).
+    share_prefix: bool = False
 
     # --- implementation knobs (hillclimb levers) ---
     attn_impl: str = "blocked"   # "naive" | "blocked" (online-softmax scan)

@@ -62,6 +62,16 @@ def main():
                     help="total blocks in the paged pool (default: dense "
                          "capacity, slots x s_max / block-size; smaller "
                          "pools trade memory for preemptions)")
+    ap.add_argument("--share-prefix", action="store_true",
+                    help="paged cache only: dedupe identical leading "
+                         "full prompt blocks across streams (ref-counted "
+                         "blocks, copy-on-write on divergent writes)")
+    ap.add_argument("--shared-prefix-tokens", type=int, default=0,
+                    help="prepend a common synthetic system prefix of N "
+                         "tokens to every request (exercises prefix "
+                         "sharing; task quality scores still use the "
+                         "unmodified prompts, so treat them as a smoke "
+                         "signal only)")
     ap.add_argument("--json", action="store_true")
     args = ap.parse_args()
     if args.concurrency < 0:
@@ -78,13 +88,19 @@ def main():
         slm_cfg = slm_cfg.replace(attn_impl=args.attn_impl)
     evalset = PC.eval_set(task, args.requests, seed=args.seed + 7)
     prompts = [p for p, _ in evalset]
+    if args.shared_prefix_tokens > 0:
+        rng = np.random.default_rng(args.seed + 29)
+        common = [int(t) for t in rng.integers(
+            1, slm_cfg.vocab - 1, args.shared_prefix_tokens)]
+        prompts = [common + list(p) for p in prompts]
     link = LinkModel(bandwidth_mbps=args.bandwidth_mbps)
     eng = PC.make_engine(llm_cfg, llm_p, slots=args.slots,
                          attn_impl=args.attn_impl,
                          verify_top_k=args.verify_top_k,
                          cache_impl=args.cache_impl,
                          block_size=args.block_size,
-                         pool_blocks=args.pool_blocks)
+                         pool_blocks=args.pool_blocks,
+                         share_prefix=args.share_prefix)
     concurrency = None if args.concurrency == 0 else args.concurrency
     arrivals = None
     if args.arrival_rate > 0:
@@ -92,6 +108,9 @@ def main():
         gaps = rng.exponential(1e3 / args.arrival_rate, len(prompts))
         arrivals = np.cumsum(gaps).tolist()
 
+    if args.share_prefix and args.cache_impl != "paged":
+        print("warning: --share-prefix requires --cache-impl paged; "
+              "ignored on the dense cache", file=sys.stderr)
     if args.mode not in ("synera", "hybrid") and (args.concurrency != 1
                                                   or arrivals is not None):
         print(f"warning: --concurrency/--arrival-rate only apply to "
@@ -146,7 +165,10 @@ def main():
                                   f"/{sched['n_blocks']}"),
                 kv_bytes_peak=sched["kv_bytes_peak"],
                 kv_cache_bytes=sched["kv_cache_bytes"],
-                preemptions=sched["preemptions"])
+                preemptions=sched["preemptions"],
+                share_prefix=sched["share_prefix"],
+                dedupe_hit_blocks=sched["dedupe_hit_blocks"],
+                cow_copies=sched["cow_copies"])
     summary.update(
         engine_host_bytes=eng.bytes_to_host,
         engine_specializations=eng.compile_stats["n_specializations"])

@@ -322,6 +322,25 @@ def cache_write_paged(cache, k_new, v_new, positions):
     }
 
 
+def cache_copy_blocks(stack, src, dst):
+    """Copy pool blocks ``src[i] -> dst[i]`` within one paged kv stack —
+    the copy-on-write fork primitive: before a slot writes into a block
+    with refcount > 1, the allocator points it at a fresh block and the
+    engine clones the shared content with this (jitted, donated) copy.
+
+    ``src``/``dst``: (m,) int32, -1-padded.  A padded pair routes the
+    destination out of bounds, which XLA scatter drops (the clamped
+    source row is gathered but never lands anywhere).
+    """
+    nb = stack["k"].shape[1]
+    s = jnp.clip(src, 0, nb - 1)
+    d = jnp.where(dst >= 0, dst, nb)
+    out = dict(stack)
+    for key in ("k", "v", "pos"):
+        out[key] = stack[key].at[:, d].set(stack[key][:, s])
+    return out
+
+
 def paged_kv_view(cache):
     """Gather a slot-major (B, s_max, ...) view of the paged pool — the
     XLA read path.  Unmapped table entries (-1) are forced out of bounds

@@ -252,6 +252,21 @@ def init_cache(cfg, batch: int, s_max: int, *, cache_impl: str | None = None,
     raise ValueError(fam)
 
 
+def copy_cache_blocks(cache, src, dst):
+    """Copy-on-write fork over a whole paged cache: clone pool blocks
+    ``src[i] -> dst[i]`` in every paged kv stack (k/v/pos move together;
+    block tables are untouched — the allocator already rewrote the
+    writer's entry).  One jitted, donated dispatch in the engine."""
+
+    def walk(c):
+        if "block_tables" in c:
+            return L.cache_copy_blocks(c, src, dst)
+        return {k: walk(v) if isinstance(v, dict) else v
+                for k, v in c.items()}
+
+    return walk(cache)
+
+
 # ---------------------------------------------------------------------------
 # Layer application
 # ---------------------------------------------------------------------------

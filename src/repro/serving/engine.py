@@ -60,6 +60,9 @@ class BlockPoolExhausted(RuntimeError):
     an unguarded driver (e.g. plain decode on an undersized pool)."""
 
 
+_CHAIN_ROOT = 0x53594E45  # prefix-hash chain seed ("SYNE")
+
+
 class BlockAllocator:
     """Host-side free-list allocator over the paged KV block pool.
 
@@ -67,17 +70,49 @@ class BlockAllocator:
     the (max_slots, max_bps) block table mirror the engine pushes to the
     device cache.  Admission/eviction *policy* lives in the scheduler.
     Blocks are recycled FIFO so reuse spreads across the pool.
+
+    With ``share_prefix=True`` blocks are ref-counted and a prefix index
+    maps chain hashes of *full* leading token blocks to the pool block
+    that already holds their K/V.  A new prompt's leading blocks are
+    matched against the index and mapped into its table (ref++) instead
+    of allocated; a write into a block with refcount > 1 forks a private
+    copy first (copy-on-write — ``prepare_writes`` does the
+    bookkeeping, the engine clones pool content).  A block returns to
+    the free list only when its refcount reaches zero, at which point it
+    also leaves the index (no cross-residency prefix persistence — a
+    ROADMAP follow-on).
+
+    Index entries are exact, not trust-the-hash: each registered block
+    stores ``(prev_chain_hash, its token tuple)`` and a match verifies
+    both, so a chain-hash collision can only *miss* a share, never map
+    wrong content.
     """
 
     def __init__(self, n_blocks: int, block_size: int, max_slots: int,
-                 max_blocks_per_slot: int):
+                 max_blocks_per_slot: int, share_prefix: bool = False):
         self.n_blocks = n_blocks
         self.block_size = block_size
         self.max_blocks_per_slot = max_blocks_per_slot
+        self.share_prefix = share_prefix
         self._free: deque[int] = deque(range(n_blocks))
         self.table = np.full((max_slots, max_blocks_per_slot), -1, np.int32)
         self.n_blocks_of = np.zeros(max_slots, np.int64)
         self.peak_used = 0
+        # per-block reference counts (always maintained; every count is 1
+        # until adopt_prefix creates the first share)
+        self.ref = np.zeros(n_blocks, np.int64)
+        # prefix index: chain hash -> block id, plus the reverse map and
+        # the exact (prev_hash, tokens) contents for verification
+        self._index: dict[int, int] = {}
+        self._rindex: dict[int, int] = {}
+        self._contents: dict[int, tuple] = {}
+        # blocks registered whose content the imminent prompt feed will
+        # write: that first write realizes the registered content and
+        # must neither fork nor unregister
+        self._fill: set[int] = set()
+        # telemetry
+        self.dedupe_hit_blocks = 0   # cumulative blocks adopted via index
+        self.cow_copies = 0          # cumulative copy-on-write forks
 
     @property
     def free_blocks(self) -> int:
@@ -86,6 +121,15 @@ class BlockAllocator:
     @property
     def used_blocks(self) -> int:
         return self.n_blocks - len(self._free)
+
+    @property
+    def shared_blocks(self) -> int:
+        """Blocks currently mapped by more than one slot."""
+        return int((self.ref >= 2).sum())
+
+    @property
+    def s_max(self) -> int:
+        return self.block_size * self.max_blocks_per_slot
 
     def blocks_for(self, n_tokens: int) -> int:
         """Blocks needed to back a sequence of ``n_tokens`` (the caller
@@ -105,20 +149,154 @@ class BlockAllocator:
             return False
         have = int(self.n_blocks_of[slot])
         for j in range(have, have + need):
-            self.table[slot, j] = self._free.popleft()
+            b = self._free.popleft()
+            self.table[slot, j] = b
+            self.ref[b] = 1
         self.n_blocks_of[slot] = have + need
         self.peak_used = max(self.peak_used, self.used_blocks)
         return True
 
     def release(self, slot: int) -> np.ndarray:
-        """Return all of ``slot``'s blocks to the pool; returns the freed
-        block ids (the engine invalidates their pool positions)."""
+        """Drop ``slot``'s reference on all its blocks.  Blocks whose
+        refcount hits zero return to the pool (and leave the prefix
+        index); blocks still mapped by a sibling stay live and MUST NOT
+        be invalidated.  Returns the truly freed block ids (the engine
+        invalidates their pool positions)."""
         n = int(self.n_blocks_of[slot])
-        freed = self.table[slot, :n].copy()
-        self._free.extend(int(b) for b in freed)
+        freed = []
+        for j in range(n):
+            b = int(self.table[slot, j])
+            self.ref[b] -= 1
+            if self.ref[b] == 0:
+                self._free.append(b)
+                self._unregister(b)
+                freed.append(b)
         self.table[slot, :] = -1
         self.n_blocks_of[slot] = 0
-        return freed
+        return np.asarray(freed, np.int32)
+
+    # -- prefix sharing / copy-on-write --------------------------------
+    def _chain(self, tokens, n_full: int):
+        """Yield (chain_hash, prev_hash, block_tuple) for the first
+        ``n_full`` full token blocks."""
+        h = _CHAIN_ROOT
+        bs = self.block_size
+        for j in range(n_full):
+            blk = tuple(int(t) for t in tokens[j * bs:(j + 1) * bs])
+            prev, h = h, hash((h, blk))
+            yield h, prev, blk
+
+    def match_prefix(self, tokens) -> list[int]:
+        """Read-only probe: pool block ids already holding the leading
+        full blocks of ``tokens``, in chain order, stopping at the first
+        divergence.  Capped at ``len(tokens) - 1`` tokens so a fully
+        cached prompt still feeds its last token (the prefill's
+        full-vocab seed row must be computed).  Prompts longer than
+        s_max wrap over their own leading blocks and never share."""
+        if not self.share_prefix or len(tokens) > self.s_max:
+            return []
+        n_full = min((len(tokens) - 1) // self.block_size,
+                     self.max_blocks_per_slot)
+        out = []
+        for h, prev, blk in self._chain(tokens, n_full):
+            bid = self._index.get(h)
+            if bid is None or self._contents.get(bid) != (prev, blk):
+                break
+            out.append(bid)
+        return out
+
+    def adopt_prefix(self, slot: int, bids: list[int]) -> None:
+        """Map matched prefix blocks into an empty slot's table (ref++):
+        the dedupe hit — no allocation, no feed, just an indirection."""
+        assert int(self.n_blocks_of[slot]) == 0, \
+            "prefix adoption requires a freshly admitted (empty) slot"
+        for j, b in enumerate(bids):
+            self.table[slot, j] = b
+            self.ref[b] += 1
+        self.n_blocks_of[slot] = len(bids)
+        self.dedupe_hit_blocks += len(bids)
+
+    def register_prefix(self, slot: int, tokens) -> None:
+        """Publish ``slot``'s full prompt blocks in the prefix index.
+        Called at admission, *before* the prompt feed writes them: the
+        blocks are marked fill-pending so the realizing write neither
+        forks nor unregisters them, and streams admitted into the same
+        batch can already adopt them (the batched step scatters K/V
+        before any suffix row attends)."""
+        if not self.share_prefix or len(tokens) > self.s_max:
+            return
+        n_full = min(len(tokens) // self.block_size,
+                     self.max_blocks_per_slot)
+        for j, (h, prev, blk) in enumerate(self._chain(tokens, n_full)):
+            if h in self._index:
+                continue                 # chain already published
+            bid = int(self.table[slot, j])
+            if bid < 0 or bid in self._rindex:
+                continue
+            self._index[h] = bid
+            self._rindex[bid] = h
+            self._contents[bid] = (prev, blk)
+            self._fill.add(bid)
+
+    def _unregister(self, bid: int) -> None:
+        h = self._rindex.pop(bid, None)
+        if h is not None:
+            self._index.pop(h, None)
+            self._contents.pop(bid, None)
+        self._fill.discard(bid)
+
+    def cow_demand(self, slot: int, lo: int, hi: int) -> int:
+        """Forks a write covering absolute positions [lo, hi) would
+        need: mapped blocks with refcount > 1 (fill-pending blocks are
+        about to be realized, not forked).  The scheduler reserves these
+        on top of ``needed`` growth."""
+        if not self.share_prefix or hi <= lo:
+            return 0
+        idxs = {(p % self.s_max) // self.block_size
+                for p in range(int(lo), int(hi))}
+        n = 0
+        for i in idxs:
+            bid = int(self.table[slot, i])
+            if bid >= 0 and bid not in self._fill and self.ref[bid] > 1:
+                n += 1
+        return n
+
+    def prepare_writes(self, slot: int, idxs) -> list[tuple[int, int]]:
+        """Copy-on-write bookkeeping for an imminent write into
+        ``slot``'s table entries ``idxs``.  Three cases per block:
+
+        * fill-pending (just registered, this write realizes the
+          promised content): cleared, nothing else happens;
+        * refcount > 1: the writer is re-pointed at a fresh block and a
+          ``(src, dst)`` fork pair is returned — the engine must clone
+          pool content src -> dst *before* the write executes;
+        * sole-owned but registered: the content is about to diverge
+          from the published hash, so the block leaves the index.
+        """
+        pairs = []
+        for i in idxs:
+            i = int(i)
+            bid = int(self.table[slot, i])
+            if bid < 0:
+                continue
+            if bid in self._fill:
+                self._fill.discard(bid)
+                continue
+            if self.ref[bid] > 1:
+                if not self._free:
+                    raise BlockPoolExhausted(
+                        f"slot {slot} must copy-on-write fork shared "
+                        f"block {bid} but the pool is dry")
+                dst = self._free.popleft()
+                self.ref[bid] -= 1
+                self.ref[dst] = 1
+                self.table[slot, i] = dst
+                self.cow_copies += 1
+                pairs.append((bid, dst))
+            elif bid in self._rindex:
+                self._unregister(bid)
+        self.peak_used = max(self.peak_used, self.used_blocks)
+        return pairs
 
 
 def _reset_paged_blocks(cache, blocks):
@@ -242,7 +420,8 @@ class CloudEngine:
                  verify_rows_max: int = 8,
                  feed_buckets: tuple = DEFAULT_FEED_BUCKETS,
                  cache_impl: str | None = None, block_size: int | None = None,
-                 pool_blocks: int | None = None):
+                 pool_blocks: int | None = None,
+                 share_prefix: bool | None = None):
         self.cfg = cfg
         self.params = params
         self.max_slots = max_slots
@@ -259,18 +438,25 @@ class CloudEngine:
         self.cache_impl = cache_impl or getattr(cfg, "cache_impl", "dense")
         self.block_size = block_size or getattr(cfg, "kv_block_size", 16)
         self.allocator: BlockAllocator | None = None
+        self.share_prefix = False
         if self.cache_impl == "paged":
             max_bps = -(-s_max // self.block_size)
             nb = (pool_blocks if pool_blocks is not None
                   else max_slots * max_bps)
+            self.share_prefix = bool(
+                share_prefix if share_prefix is not None
+                else getattr(cfg, "share_prefix", False))
             self.allocator = BlockAllocator(nb, self.block_size, max_slots,
-                                            max_bps)
+                                            max_bps,
+                                            share_prefix=self.share_prefix)
             self.cache = M.init_cache(cfg, max_slots, s_max,
                                       cache_impl="paged",
                                       block_size=self.block_size,
                                       pool_blocks=nb)
             self._reset_blocks = jax.jit(_reset_paged_blocks,
                                          donate_argnums=0)
+            self._copy_blocks = jax.jit(M.copy_cache_blocks,
+                                        donate_argnums=0)
             self._tables_dirty = False
         else:
             self.cache = M.init_cache(cfg, max_slots, s_max)
@@ -346,16 +532,25 @@ class CloudEngine:
     def _ensure_blocks(self, positions: np.ndarray):
         """Grow each active slot's allocation to cover the highest
         position this step writes (capped at s_max — the circular window
-        wraps beyond it).  Raises :class:`BlockPoolExhausted` when the
-        pool is dry; the scheduler's admission + preemption layer is
-        responsible for never letting that happen."""
+        wraps beyond it), forking any shared block the step would write
+        into (copy-on-write) so siblings keep reading the original.
+        Raises :class:`BlockPoolExhausted` when the pool is dry; the
+        scheduler's admission + preemption layer is responsible for
+        never letting that happen."""
         if self.allocator is None:
             return
         pos = np.asarray(positions)
+        forks: list[tuple[int, int]] = []
         for slot in range(pos.shape[0]):
             valid = pos[slot][pos[slot] >= 0]
             if valid.size == 0:
                 continue
+            if self.allocator.share_prefix:
+                # allocator.s_max (block-size padded) is the same modulus
+                # cache_write_paged wraps with on device
+                idxs = np.unique((valid % self.allocator.s_max)
+                                 // self.allocator.block_size)
+                forks += self.allocator.prepare_writes(slot, idxs)
             L = min(int(valid.max()) + 1, self.s_max)
             if self.allocator.needed(slot, L):
                 if not self.allocator.extend(slot, L):
@@ -364,7 +559,62 @@ class CloudEngine:
                         f" more KV blocks; pool has "
                         f"{self.allocator.free_blocks} free")
                 self._tables_dirty = True
+        if forks:
+            self._tables_dirty = True
+            self._apply_forks(forks)
         self._sync_tables()
+
+    def _apply_forks(self, pairs: list[tuple[int, int]]):
+        """Clone pool content for copy-on-write forks (src -> dst across
+        every layer stack) in jitted, donated dispatches.  Pairs are
+        chunked to the fixed (max_bps,) plan so jit specializations stay
+        bounded regardless of how many forks one step needs."""
+        W = self.allocator.max_blocks_per_slot
+        for off in range(0, len(pairs), W):
+            grp = pairs[off:off + W]
+            src = np.full(W, -1, np.int32)
+            dst = np.full(W, -1, np.int32)
+            src[:len(grp)] = [s for s, _ in grp]
+            dst[:len(grp)] = [d for _, d in grp]
+            self.cache = _call_donated(self._copy_blocks, self.cache,
+                                       jnp.asarray(src), jnp.asarray(dst))
+
+    def alloc_prompt(self, slot: int, tokens, bids: list | None = None) -> int:
+        """Allocate a freshly admitted slot's prompt blocks, deduping
+        the leading full blocks against the prefix index.  Returns the
+        number of leading prompt tokens now backed by shared blocks (0
+        without ``share_prefix``) — the scheduler feeds only the suffix,
+        from the first divergent token.  ``bids`` lets the caller pass
+        the ``match_prefix`` probe it already ran for admission (valid
+        as long as nothing was released in between).
+
+        Matching, adoption, fresh allocation and registration all happen
+        here, at admission, *before* the batched prompt feed: streams
+        admitted into the same iteration dedupe against each other.
+        This is safe only because the scheduler aligns prefill columns
+        with absolute positions, so every sub-chunk of a split feed
+        scatters a position range for all slots before any later
+        sub-chunk's rows attend over it."""
+        a = self.allocator
+        assert a is not None, "alloc_prompt requires a paged engine"
+        shared = 0
+        if bids is None:
+            bids = a.match_prefix(tokens)
+        if bids:
+            a.adopt_prefix(slot, bids)
+            shared = len(bids) * a.block_size
+            self._tables_dirty = True
+        L = min(len(tokens), self.s_max)
+        if a.needed(slot, L):
+            if not a.extend(slot, L):
+                raise BlockPoolExhausted(
+                    f"prompt of {len(tokens)} tokens needs "
+                    f"{a.needed(slot, L)} more KV blocks for slot {slot}; "
+                    f"pool has {a.free_blocks} free — admission should "
+                    f"have deferred this prefill")
+            self._tables_dirty = True
+        a.register_prefix(slot, tokens)
+        return shared
 
     def kv_cache_bytes(self) -> int:
         """Total bytes backing the KV cache (dense buffers or the whole
@@ -399,7 +649,8 @@ class CloudEngine:
             return dict(cache_impl="dense", kv_cache_bytes=total,
                         kv_bytes_in_use=total, kv_bytes_peak=total,
                         free_blocks=0, used_blocks=0, peak_used_blocks=0,
-                        n_blocks=0, block_size=0)
+                        n_blocks=0, block_size=0, share_prefix=False,
+                        shared_blocks=0, dedupe_hit_blocks=0, cow_copies=0)
         a = self.allocator
         bb = self.block_bytes()
         return dict(cache_impl="paged", kv_cache_bytes=total,
@@ -407,7 +658,10 @@ class CloudEngine:
                     kv_bytes_peak=a.peak_used * bb,
                     free_blocks=a.free_blocks, used_blocks=a.used_blocks,
                     peak_used_blocks=a.peak_used, n_blocks=a.n_blocks,
-                    block_size=a.block_size)
+                    block_size=a.block_size, share_prefix=a.share_prefix,
+                    shared_blocks=a.shared_blocks,
+                    dedupe_hit_blocks=a.dedupe_hit_blocks,
+                    cow_copies=a.cow_copies)
 
     # -- bucketing ------------------------------------------------------
     def _bucket_of(self, n: int) -> int:
@@ -510,19 +764,26 @@ class CloudEngine:
         self._calls["prefill"] += 1
         self._ensure_blocks(positions)
         B, C = tokens.shape
-        counts = (positions >= 0).sum(axis=1)
+        valid = positions >= 0
+        # last valid column per slot (-1 = idle).  Valid entries need
+        # not start at column 0: prefix-sharing feeds align columns with
+        # absolute positions and pad the shared prefix
+        last_col = np.where(valid.any(axis=1),
+                            C - 1 - np.argmax(valid[:, ::-1], axis=1), -1)
         targets = np.full((B, C), -1, np.int32)
         no_sel = np.full((B, self.verify_rows_max), -1, np.int32)
         out = np.zeros((B, self.vocab), np.float32)
         for off, w in self._chunks(C):
             sl = slice(off, off + w)
-            local = np.clip(counts - 1 - off, 0, w - 1).astype(np.int32)
+            if not (positions[:, sl] >= 0).any():
+                continue   # every slot's columns are shared-prefix padding
+            local = np.clip(last_col - off, 0, w - 1).astype(np.int32)
             # only the last-row gather is consumed: the argmax-only step
             # variant suffices (no extra specialization, no wasted top-k)
             res = self._run_fused(tokens[:, sl], positions[:, sl],
                                   targets[:, sl], no_sel, local,
                                   with_dists=False)
-            sel = (counts > 0) & (counts - 1 >= off) & (counts - 1 < off + w)
+            sel = (last_col >= off) & (last_col < off + w)
             if sel.any():
                 # gather on device only the slots whose LAST prompt row
                 # lives in this sub-chunk — the documented transfer is

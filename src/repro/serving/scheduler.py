@@ -60,6 +60,10 @@ class PrefillRequest:
     tokens: np.ndarray            # (T,) prompt
     slot: int = -1
     arrival_ms: float = 0.0       # absolute arrival on the shared clock
+    # leading prompt tokens mapped from the shared prefix index at
+    # admission (share_prefix): already cached, so the batch feeds (and
+    # the latency model charges) only tokens[shared:]
+    shared: int = 0
 
 
 @dataclass
@@ -207,38 +211,60 @@ class VerificationAwareScheduler:
     # -- prefill (lines 5-11) ------------------------------------------
     def _prefill_iteration(self, now: float) -> list[SchedulerEvent]:
         alloc = getattr(self.engine, "allocator", None)
-        avail_blocks = alloc.free_blocks if alloc is not None else 0
         blocks_exhausted = False
         batch: list[PrefillRequest] = []
         rest: deque[PrefillRequest] = deque()
         while self.prefill_q:
             req = self.prefill_q.popleft()
             # admission is memory-bound on a paged engine: a free batch
-            # row AND enough free blocks for the prompt; on dense the
-            # slot row is the only resource.  Once one arrived request
-            # is deferred for blocks, later (block-needing) requests are
-            # too — FCFS, so a steady stream of small prompts cannot
-            # starve a large one
-            need = (alloc.blocks_for(len(req.tokens))
-                    if alloc is not None else 0)
-            if need > (alloc.n_blocks if alloc is not None else 0) > 0:
-                # can never be satisfied, not even by draining the pool:
-                # fail with the sizing contract instead of stalling
-                raise RuntimeError(
-                    f"paged KV pool too small for prompt of "
-                    f"{len(req.tokens)} tokens: needs {need} blocks, "
-                    f"pool has {alloc.n_blocks} total (block_size="
-                    f"{alloc.block_size}) — grow pool_blocks")
-            if need > avail_blocks and req.arrival_ms <= now:
-                blocks_exhausted = True
-            if (req.arrival_ms > now or not self.free_slots
-                    or (blocks_exhausted and need > 0)):
+            # row AND enough free blocks for the prompt — minus any
+            # leading blocks the prefix index already holds (a shared
+            # system prompt costs its blocks once, not once per stream).
+            # On dense the slot row is the only resource.  Once one
+            # arrived request is deferred for blocks, later
+            # (block-needing) requests are too — FCFS, so a steady
+            # stream of small prompts cannot starve a large one
+            if req.arrival_ms > now or not self.free_slots:
+                rest.append(req)    # cheap defers skip the prefix probe
+                continue
+            if blocks_exhausted:
+                # FCFS tail: a paged prompt always needs >= 1 fresh
+                # block (matching caps at len-1 tokens), so nothing
+                # behind the first block-deferred request can admit —
+                # skip its probe too
                 rest.append(req)
                 continue
-            avail_blocks -= need
+            need = 0
+            matched: list = []
+            if alloc is not None:
+                full_need = alloc.blocks_for(len(req.tokens))
+                if full_need > alloc.n_blocks:
+                    # can never be satisfied, not even by draining the
+                    # pool (shared blocks may vanish with their owners):
+                    # fail with the sizing contract instead of stalling
+                    raise RuntimeError(
+                        f"paged KV pool too small for prompt of "
+                        f"{len(req.tokens)} tokens: needs {full_need} "
+                        f"blocks, pool has {alloc.n_blocks} total "
+                        f"(block_size={alloc.block_size}) — grow "
+                        f"pool_blocks")
+                matched = alloc.match_prefix(req.tokens)
+                need = full_need - len(matched)
+                if need > alloc.free_blocks:
+                    blocks_exhausted = True
+                    rest.append(req)
+                    continue
             req.slot = self.free_slots.popleft()
             self._admit_counter += 1
             self.slot_age[req.slot] = self._admit_counter
+            if alloc is not None:
+                # allocate (and prefix-share) eagerly so the request
+                # admitted next in this same loop sees the live free
+                # count AND can adopt this prompt's just-registered
+                # blocks; the probe above is still valid (nothing is
+                # released between probe and admission)
+                req.shared = self.engine.alloc_prompt(req.slot, req.tokens,
+                                                      bids=matched)
             batch.append(req)
         self.prefill_q = rest
         if not batch:
@@ -250,9 +276,16 @@ class VerificationAwareScheduler:
         tokens = np.zeros((B, C), np.int32)
         positions = np.full((B, C), -1, np.int32)
         for r in batch:
-            T = len(r.tokens)
-            tokens[r.slot, :T] = r.tokens
-            positions[r.slot, :T] = np.arange(T)
+            T, m = len(r.tokens), r.shared
+            # columns align with absolute positions; a shared prefix is
+            # leading padding.  This is what keeps same-batch adoption
+            # safe when the bucket ladder splits a wide prompt batch
+            # into sequential sub-chunks: sub-chunk k scatters position
+            # range k for EVERY slot before any later sub-chunk's rows
+            # attend over it, so an adopter's suffix never reads prefix
+            # positions its filler has not yet written
+            tokens[r.slot, m:T] = r.tokens[m:]
+            positions[r.slot, m:T] = np.arange(m, T)
         # one full-vocab row per slot crosses to the host here (the
         # sampling verifier's pre-draft row); verify iterations never
         # transfer a vocab-sized tensor
@@ -261,7 +294,8 @@ class VerificationAwareScheduler:
         moved = getattr(self.engine, "bytes_to_host", 0) - b0
 
         events = []
-        total = sum(len(r.tokens) for r in batch)
+        # shared prefix tokens are cache hits: neither fed nor charged
+        total = sum(len(r.tokens) - r.shared for r in batch)
         self.clock.advance(self.latency.prefill_ms(total)
                            + self.latency.host_transfer_ms(moved))
         self.prefill_iterations += 1
@@ -393,8 +427,13 @@ class VerificationAwareScheduler:
 
         def demand(entry):
             req, fed0, n = entry
-            upto = min(req.start_pos + fed0 + n, self.engine.s_max)
-            return alloc.needed(req.slot, upto)
+            lo = req.start_pos + fed0
+            upto = min(lo + n, self.engine.s_max)
+            # growth blocks plus copy-on-write forks: a chunk that wraps
+            # into (or otherwise writes) a block still shared with a
+            # sibling must clone it before writing
+            return (alloc.needed(req.slot, upto)
+                    + alloc.cow_demand(req.slot, lo, lo + n))
 
         evicted = False
         while feeding:

@@ -84,6 +84,11 @@ class ServerStats:
     kv_bytes_peak: int = 0
     preemptions: int = 0
     preempted_refed_tokens: int = 0
+    # -- prefix sharing (share_prefix on a paged engine) --
+    share_prefix: bool = False
+    shared_blocks: int = 0             # blocks currently mapped by >1 slot
+    dedupe_hit_blocks: int = 0         # cumulative blocks adopted, not alloc'd
+    cow_copies: int = 0                # cumulative copy-on-write forks
 
     def as_dict(self) -> dict:
         return asdict(self)
@@ -302,6 +307,10 @@ class SyneraServer:
             kv_bytes_peak=pool["kv_bytes_peak"],
             preemptions=sched.preemptions,
             preempted_refed_tokens=sched.preempted_refed_tokens,
+            share_prefix=pool["share_prefix"],
+            shared_blocks=pool["shared_blocks"],
+            dedupe_hit_blocks=pool["dedupe_hit_blocks"],
+            cow_copies=pool["cow_copies"],
         )
 
     def stats(self) -> dict:

@@ -1,0 +1,373 @@
+"""Prefix-sharing paged KV cache: ref-counted copy-on-write blocks.
+
+The headline property (ISSUE 4 acceptance): with ``share_prefix``
+enabled, >= 8 concurrent streams sharing a multi-block common prompt
+prefix produce greedy token streams byte-identical to the non-sharing
+paged path and to dense, while ``peak_used_blocks`` drops by at least
+the deduplicated prefix blocks x (streams - 1).  Forced copy-on-write
+forks and preemption of a sharing stream both preserve identity.
+
+Layers covered:
+
+* ``BlockAllocator`` units — match/adopt refcounts, release-to-zero
+  frees + unregisters, CoW fork bookkeeping, divergence unregistration,
+  preempt-while-shared leaving the sibling's blocks live;
+* engine-level forced CoW fork (a divergent write into a shared block)
+  asserted bit-identical to a non-sharing engine run;
+* serving-level acceptance, tight-pool preemption, admission that only
+  fits co-resident streams when sharing is on;
+* a hypothesis property across block sizes, common-prefix lengths and
+  divergence points.
+
+Engines are module-scoped fixtures (jitted steps are expensive to
+recompile; released slots are fully reset so reuse is safe).
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.synera_pair import tiny_pair
+from repro.core.offload import OffloadPolicy
+from repro.models import model as M
+from repro.serving.device import DeviceRuntime
+from repro.serving.engine import (BlockAllocator, BlockPoolExhausted,
+                                  CloudEngine)
+from repro.serving.scheduler import PrefillRequest, VerificationAwareScheduler
+from repro.serving import synergy as SY
+
+S_MAX = 256
+BS = 8
+
+
+@pytest.fixture(scope="module")
+def pair():
+    slm_cfg, llm_cfg = tiny_pair(vocab=64)
+    slm_p = M.init_params(slm_cfg, jax.random.PRNGKey(0))
+    llm_p = M.init_params(llm_cfg, jax.random.PRNGKey(1))
+    return slm_cfg, slm_p, llm_cfg, llm_p
+
+
+@pytest.fixture(scope="module")
+def dev(pair):
+    slm_cfg, slm_p, _, _ = pair
+    return DeviceRuntime(slm_cfg, slm_p, s_max=S_MAX, gamma=4, seed=0,
+                        policy=OffloadPolicy(mode="all"),
+                        use_early_exit=False, use_pi=False)
+
+
+@pytest.fixture(scope="module")
+def eng_dense(pair):
+    _, _, llm_cfg, llm_p = pair
+    return CloudEngine(llm_cfg, llm_p, max_slots=2, s_max=S_MAX)
+
+
+@pytest.fixture(scope="module")
+def eng_share8(pair):
+    _, _, llm_cfg, llm_p = pair
+    return CloudEngine(llm_cfg, llm_p, max_slots=8, s_max=S_MAX,
+                       cache_impl="paged", block_size=BS,
+                       share_prefix=True)
+
+
+@pytest.fixture(scope="module")
+def eng_noshare8(pair):
+    _, _, llm_cfg, llm_p = pair
+    return CloudEngine(llm_cfg, llm_p, max_slots=8, s_max=S_MAX,
+                       cache_impl="paged", block_size=BS)
+
+
+def _toks(rng, n):
+    return [int(t) for t in rng.integers(1, 60, size=n)]
+
+
+def _shared_prompts(n_streams, common_len, suffix_lens, seed=11):
+    rng = np.random.default_rng(seed)
+    common = _toks(rng, common_len)
+    return [common + _toks(rng, suffix_lens[i % len(suffix_lens)])
+            for i in range(n_streams)]
+
+
+# ---------------------------------------------------------------------------
+# BlockAllocator units
+# ---------------------------------------------------------------------------
+
+def test_allocator_match_adopt_refcounts():
+    a = BlockAllocator(8, 4, 4, 8, share_prefix=True)
+    toks = list(range(1, 13))                   # 12 tokens = 3 full blocks
+    assert a.match_prefix(toks) == []           # cold index
+    assert a.extend(0, 12)                      # owner allocates 3 blocks
+    a.register_prefix(0, toks)
+    # matching caps at len-1 tokens: 2 of the 3 full blocks are adoptable
+    m = a.match_prefix(toks)
+    assert m == [int(a.table[0, j]) for j in range(2)]
+    # a longer prompt with the same prefix matches all 3 registered blocks
+    assert len(a.match_prefix(toks + [50, 51])) == 3
+    # a diverging prompt stops at the divergent block
+    assert len(a.match_prefix(toks[:4] + [0] * 8)) == 1
+    a.adopt_prefix(1, m)
+    assert int(a.n_blocks_of[1]) == 2
+    assert all(int(a.ref[b]) == 2 for b in m)
+    assert a.used_blocks == 3                   # no physical allocation
+    assert a.shared_blocks == 2
+    assert a.dedupe_hit_blocks == 2
+
+
+def test_allocator_release_to_zero_frees_and_unregisters():
+    a = BlockAllocator(8, 4, 4, 8, share_prefix=True)
+    toks = list(range(1, 13))
+    a.extend(0, 12)
+    a.register_prefix(0, toks)
+    a.adopt_prefix(1, a.match_prefix(toks))
+    # releasing the adopter frees nothing physical (all blocks shared)
+    freed = a.release(1)
+    assert len(freed) == 0 and a.used_blocks == 3
+    assert all(int(r) in (0, 1) for r in a.ref)  # back to sole ownership
+    # releasing the owner drops every refcount to zero: blocks free AND
+    # leave the index (no cross-residency persistence)
+    freed = a.release(0)
+    assert len(freed) == 3 and a.used_blocks == 0
+    assert a.match_prefix(toks) == []
+
+
+def test_allocator_cow_fork_and_divergence_unregister():
+    a = BlockAllocator(8, 4, 4, 8, share_prefix=True)
+    toks = list(range(1, 13))
+    a.extend(0, 12)
+    a.register_prefix(0, toks)
+    # the owner's prompt feed realizes the registered content: the
+    # fill-pending write neither forks nor unregisters
+    assert a.prepare_writes(0, [0, 1, 2]) == []
+    assert a.match_prefix(toks + [9]) != []
+    m = a.match_prefix(toks)
+    a.adopt_prefix(1, m)
+    # a divergent write by the adopter into a shared block forks it
+    src = m[1]
+    pairs = a.prepare_writes(1, [1])
+    assert len(pairs) == 1 and pairs[0][0] == src
+    dst = pairs[0][1]
+    assert int(a.table[1, 1]) == dst != src
+    assert int(a.ref[src]) == 1 and int(a.ref[dst]) == 1
+    assert a.cow_copies == 1 and a.used_blocks == 4
+    # the source block stays registered (its content is intact) ...
+    assert a.match_prefix(toks) == m
+    # ... and once the adopter is gone, a sole-owner divergent write
+    # unpublishes the chain head instead of forking
+    a.release(1)
+    assert int(a.ref[m[0]]) == 1
+    assert a.prepare_writes(0, [0]) == []       # ref == 1: no fork
+    assert a.match_prefix(toks) == []
+
+
+def test_allocator_cow_fork_requires_free_block():
+    a = BlockAllocator(3, 4, 4, 8, share_prefix=True)
+    toks = list(range(1, 13))
+    a.extend(0, 12)                              # pool fully used
+    a.register_prefix(0, toks)
+    a.prepare_writes(0, [0, 1, 2])               # consume fill markers
+    a.adopt_prefix(1, a.match_prefix(toks))
+    with pytest.raises(BlockPoolExhausted):
+        a.prepare_writes(1, [0])
+
+
+# ---------------------------------------------------------------------------
+# Engine-level forced CoW fork
+# ---------------------------------------------------------------------------
+
+def _drive_cow_script(eng):
+    """Prefill two slots with the same prompt (the second adopts under
+    sharing), force a divergent write into the shared region for slot 1,
+    then decode both slots.  Returns every host-visible output."""
+    rng = np.random.default_rng(13)
+    P = _toks(rng, 12)                          # 3 blocks at bs=4
+    B = eng.max_slots
+    out = []
+
+    def prefill(slot, m):
+        n = len(P) - m
+        t = np.zeros((B, n), np.int32)
+        p = np.full((B, n), -1, np.int32)
+        t[slot, :n] = P[m:]
+        p[slot, :n] = np.arange(m, len(P))
+        return eng.prefill(t, p)
+
+    out.append(prefill(0, eng.alloc_prompt(0, P)))
+    m1 = eng.alloc_prompt(1, P)
+    out.append(prefill(1, m1))
+    # divergent write: rewrite slot 1's positions 4..7 (inside the
+    # second prompt block, shared when sharing is on) with new tokens
+    Q = _toks(rng, 4)
+    t = np.zeros((B, 4), np.int32)
+    p = np.full((B, 4), -1, np.int32)
+    t[1, :] = Q
+    p[1, :] = 4 + np.arange(4)
+    rows = eng.feed(t, p, need_dists=False)
+    out.append(rows.token_id)
+    # decode both slots at their next position: slot 0 must be blind to
+    # slot 1's rewrite, slot 1 must see it
+    td = np.full((B, 1), 7, np.int32)
+    pd = np.full((B, 1), -1, np.int32)
+    pd[0, 0] = pd[1, 0] = 12
+    d = eng.decode(td, pd)
+    out += [d.token_id, d.topk_idx, d.topk_val]
+    return out, m1
+
+
+def test_forced_cow_fork_preserves_identity(pair):
+    """A divergent write into a shared block forks a private copy: the
+    writer sees its new content, the sibling still reads the original,
+    and every output matches a non-sharing engine bit-for-bit."""
+    _, _, llm_cfg, llm_p = pair
+    eng_on = CloudEngine(llm_cfg, llm_p, max_slots=2, s_max=64,
+                         cache_impl="paged", block_size=4,
+                         share_prefix=True)
+    eng_off = CloudEngine(llm_cfg, llm_p, max_slots=2, s_max=64,
+                          cache_impl="paged", block_size=4)
+    got_on, m_on = _drive_cow_script(eng_on)
+    got_off, m_off = _drive_cow_script(eng_off)
+    assert m_on == 8 and m_off == 0             # sharing actually engaged
+    a = eng_on.allocator
+    assert a.cow_copies == 1                    # exactly one fork
+    assert a.dedupe_hit_blocks == 2
+    for i, (x, y) in enumerate(zip(got_on, got_off)):
+        assert np.array_equal(np.asarray(x), np.asarray(y)), f"output {i}"
+    # slot 0 still shares nothing it wrote; fork dropped the share
+    assert a.shared_blocks == 1                 # only block 0 still shared
+    eng_on.reset_slot(0)
+    eng_on.reset_slot(1)
+    eng_off.reset_slot(0)
+    eng_off.reset_slot(1)
+    assert a.used_blocks == 0
+
+
+# ---------------------------------------------------------------------------
+# Serving-level acceptance
+# ---------------------------------------------------------------------------
+
+def test_shared_prefix_acceptance(dev, eng_dense, eng_share8, eng_noshare8):
+    """ISSUE 4 acceptance: 8 concurrent streams sharing a 3-block common
+    prefix — byte-identical to non-sharing paged and to dense, with peak
+    pool usage down by >= shared blocks x (streams - 1)."""
+    n = 8
+    prompts = _shared_prompts(n, common_len=3 * BS, suffix_lens=[BS],
+                              seed=11)
+    r_ref = SY.run_synera(dev, eng_dense, prompts, 10, concurrency=1)
+    r_off = SY.run_synera(dev, eng_noshare8, prompts, 10, concurrency=n)
+    r_on = SY.run_synera(dev, eng_share8, prompts, 10, concurrency=n)
+    assert r_off.outputs == r_ref.outputs
+    assert r_on.outputs == r_ref.outputs
+    st_off = r_off.extras["scheduler"]
+    st_on = r_on.extras["scheduler"]
+    assert st_on["share_prefix"] and not st_off["share_prefix"]
+    # 3 common full blocks dedupe across the 7 adopting streams
+    assert st_on["dedupe_hit_blocks"] >= 3 * (n - 1)
+    drop = st_off["peak_used_blocks"] - st_on["peak_used_blocks"]
+    assert drop >= 3 * (n - 1), (st_off, st_on)
+    # pool fully drained, index emptied with the last reference
+    assert eng_share8.allocator.used_blocks == 0
+    assert eng_share8.allocator.shared_blocks == 0
+    assert len(eng_share8.allocator._index) == 0
+
+
+def test_preempt_sharing_stream_preserves_identity(dev, eng_dense, pair):
+    """A pool too small for all sharing streams forces preemption of a
+    stream that holds shared blocks: its refs are released (never freeing
+    a block out from under a sibling), it refeeds from scratch, and the
+    final token streams stay byte-identical to dense."""
+    _, _, llm_cfg, llm_p = pair
+    eng = CloudEngine(llm_cfg, llm_p, max_slots=2, s_max=S_MAX,
+                      cache_impl="paged", block_size=4, pool_blocks=11,
+                      share_prefix=True)
+    prompts = _shared_prompts(4, common_len=8, suffix_lens=[4], seed=29)
+    r_ref = SY.run_synera(dev, eng_dense, prompts, 12, concurrency=1)
+    r_pg = SY.run_synera(dev, eng, prompts, 12, concurrency=4)
+    assert r_pg.outputs == r_ref.outputs
+    st_ = r_pg.extras["scheduler"]
+    assert st_["preemptions"] >= 1
+    assert st_["dedupe_hit_blocks"] >= 1
+    assert eng.allocator.used_blocks == 0
+    assert eng.allocator.free_blocks == eng.allocator.n_blocks
+
+
+def test_admission_fits_only_with_sharing(pair):
+    """One prefill iteration admits all 4 streams only when the common
+    prefix dedupes: 4 x 3-block prompts on a 7-block pool (cold cost 12,
+    shared cost 3 + 3 x 1 = 6)."""
+    _, _, llm_cfg, llm_p = pair
+    rng = np.random.default_rng(31)
+    common = _toks(rng, 8)                       # 2 blocks at bs=4
+    prompts = [common + _toks(rng, 4) for _ in range(4)]
+
+    def admitted(share):
+        eng = CloudEngine(llm_cfg, llm_p, max_slots=4, s_max=64,
+                          cache_impl="paged", block_size=4, pool_blocks=7,
+                          share_prefix=share)
+        sched = VerificationAwareScheduler(eng, chunk=8)
+        for rid, p in enumerate(prompts):
+            sched.submit_prefill(PrefillRequest(rid + 1, np.asarray(p)))
+        evs = sched.run_iteration()
+        n_adm = len(evs)
+        stats = dict(eng.pool_stats)
+        for s in range(eng.max_slots):
+            if eng.allocator.n_blocks_of[s] > 0:
+                sched.release_slot(s)
+        assert eng.allocator.used_blocks == 0
+        return n_adm, stats
+
+    n_on, st_on = admitted(True)
+    n_off, st_off = admitted(False)
+    assert n_on == 4, st_on                      # all co-resident
+    assert n_off == 2, st_off                    # pool-bound without dedupe
+    assert st_on["used_blocks"] == 6 and st_on["shared_blocks"] == 2
+    assert st_on["dedupe_hit_blocks"] == 6       # 2 blocks x 3 adopters
+
+
+def test_same_batch_adoption_survives_feed_split(dev, pair):
+    """Regression: when the bucket ladder splits a prompt batch into
+    sequential sub-chunks, a same-iteration adopter's suffix rows must
+    not attend before its filler has scattered the shared prefix.  The
+    scheduler aligns prefill columns with absolute positions (shared
+    prefix = leading padding), so sub-chunk k writes position range k
+    for every slot before any later sub-chunk reads it.  With a tiny
+    ladder and an unaligned feed this diverged streams silently."""
+    _, _, llm_cfg, llm_p = pair
+
+    def mk(share):
+        return CloudEngine(llm_cfg, llm_p, max_slots=4, s_max=64,
+                           cache_impl="paged", block_size=4,
+                           share_prefix=share, feed_buckets=(8,))
+
+    prompts = _shared_prompts(4, common_len=16, suffix_lens=[5, 7],
+                              seed=61)
+    r_off = SY.run_synera(dev, mk(False), prompts, 8, concurrency=4)
+    r_on = SY.run_synera(dev, mk(True), prompts, 8, concurrency=4)
+    assert r_on.outputs == r_off.outputs
+    assert r_on.extras["scheduler"]["dedupe_hit_blocks"] > 0
+
+
+# ---------------------------------------------------------------------------
+# Property: identity across block sizes, prefix lengths, divergence points
+# ---------------------------------------------------------------------------
+
+@given(st.integers(4, 24),        # common prefix length (any divergence pt)
+       st.integers(2, 4),         # number of streams
+       st.integers(1, 11))        # suffix length seed
+@settings(max_examples=5, deadline=None)
+def test_shared_prefix_property(dev, eng_share8, eng_noshare8,
+                                common_len, n_streams, suffix_seed):
+    """Streams with a common prefix produce byte-identical greedy
+    outputs with and without sharing, wherever the divergence point
+    falls relative to block boundaries."""
+    rng = np.random.default_rng(common_len * 31 + n_streams * 7
+                                + suffix_seed)
+    suffix_lens = [int(rng.integers(1, 12)) for _ in range(n_streams)]
+    prompts = _shared_prompts(n_streams, common_len, suffix_lens,
+                              seed=suffix_seed + 3)
+    r_off = SY.run_synera(dev, eng_noshare8, prompts, 8,
+                          concurrency=n_streams)
+    r_on = SY.run_synera(dev, eng_share8, prompts, 8,
+                         concurrency=n_streams)
+    assert r_on.outputs == r_off.outputs
+    assert eng_share8.allocator.used_blocks == 0

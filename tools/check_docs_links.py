@@ -1,0 +1,63 @@
+"""Fail CI on dead relative links in README.md and docs/.
+
+Scans markdown links and images (``[text](target)``), skips absolute
+URLs (http/https/mailto) and pure in-page anchors (``#...``), strips
+anchors from file targets, and verifies every remaining path exists
+relative to the file that references it.
+
+  python tools/check_docs_links.py [root]
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)\)")
+SKIP_PREFIXES = ("http://", "https://", "mailto:")
+
+
+def doc_files(root: Path):
+    files = []
+    readme = root / "README.md"
+    if readme.exists():
+        files.append(readme)
+    files += sorted((root / "docs").glob("**/*.md"))
+    return files
+
+
+def check(root: Path) -> list[str]:
+    errors = []
+    for md in doc_files(root):
+        text = md.read_text(encoding="utf-8")
+        for m in LINK_RE.finditer(text):
+            target = m.group(1)
+            if target.startswith(SKIP_PREFIXES) or target.startswith("#"):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:
+                continue
+            resolved = (md.parent / path).resolve()
+            if not resolved.exists():
+                line = text[:m.start()].count("\n") + 1
+                errors.append(f"{md.relative_to(root)}:{line}: "
+                              f"dead link -> {target}")
+    return errors
+
+
+def main():
+    root = Path(sys.argv[1] if len(sys.argv) > 1 else ".").resolve()
+    files = doc_files(root)
+    if not files:
+        print("no markdown files found", file=sys.stderr)
+        return 1
+    errors = check(root)
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"checked {len(files)} files: "
+          f"{'FAIL' if errors else 'ok'} ({len(errors)} dead links)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
