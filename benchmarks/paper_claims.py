@@ -70,13 +70,16 @@ def make_engine(llm_cfg, llm_p, slots: int = 2, attn_impl: str | None = None,
                 verify_top_k: int = 8, cache_impl: str | None = None,
                 block_size: int | None = None,
                 pool_blocks: int | None = None,
-                share_prefix: bool | None = None):
+                share_prefix: bool | None = None,
+                swap: bool | None = None,
+                host_swap_blocks: int | None = None):
     cfg = llm_cfg if attn_impl is None else llm_cfg.replace(
         attn_impl=attn_impl)
     return CloudEngine(cfg, llm_p, max_slots=slots, s_max=S_MAX,
                        verify_top_k=verify_top_k, cache_impl=cache_impl,
                        block_size=block_size, pool_blocks=pool_blocks,
-                       share_prefix=share_prefix)
+                       share_prefix=share_prefix, swap=swap,
+                       host_swap_blocks=host_swap_blocks)
 
 
 def profile_pair(dev, eng, evalset, task):

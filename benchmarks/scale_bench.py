@@ -31,10 +31,19 @@ Three sweeps:
    ref-counted into every stream's block table instead of once per
    stream.
 
+4. **Preemption-pressure sweep** (``preempt_sweep``): recompute vs swap
+   vs slo-aware eviction on a pool sized to force preemption, short vs
+   long prompt prefixes at oversubscribed concurrency.  Outputs are
+   asserted byte-identical across dispositions; the headline column is
+   ``preempted_refed_tokens`` — recompute refeeds the victim's whole
+   prefix, the host swap tier restores it bit-identical and refeeds
+   nothing.
+
 Usage:
   PYTHONPATH=src:. python -m benchmarks.scale_bench [--fast] \
       [--streams 1,2,4,8] [--concurrency 8,32,128] \
       [--shared-streams 4,8] [--prefix-blocks 4] \
+      [--preempt-concurrency 8,32,128] \
       [--out benchmarks/BENCH_scale.json]
 
 Skipped sweeps ('' as the list) keep their previously written section
@@ -268,6 +277,107 @@ def run_shared_prefix_sweep(streams=(4, 8), max_new: int = 8,
                 rows=rows)
 
 
+def run_preempt_sweep(concurrency=(8, 32, 128), max_new: int = 6,
+                      slots: int = 8, block_size: int = 8,
+                      long_tokens: int = 40, short_tokens: int = 8) -> dict:
+    """Preemption pressure: recompute vs swap vs slo-aware eviction on a
+    pool sized so concurrent streams force evictions (ISSUE 5).
+
+    For each stream count and prompt profile (short vs long prefixes)
+    the same request set is served four ways on fresh pool state:
+
+    * roomy pool (dense-capacity blocks, no preemption — the reference);
+    * tight pool, recompute-eviction (victims refeed their whole prefix);
+    * tight pool, host swap tier (victims park in host RAM, restore
+      bit-identical, refeed nothing);
+    * tight pool, swap + slo-aware victim selection (every other stream
+      carries a deadline; no-SLO streams absorb the evictions).
+
+    Outputs are asserted byte-identical across all four.  The headline
+    column is ``preempted_refed_tokens``: recompute pays the re-prefill
+    (large for long prefixes), swap pays only the modeled D2H+H2D bytes.
+    """
+    from benchmarks import paper_claims as PC
+    from benchmarks.prepare import get_pair
+    from repro.core.offload import OffloadPolicy
+    from repro.serving.swap import StreamSLO
+    from repro.serving import synergy as SY
+
+    slm_cfg, slm_p, llm_cfg, llm_p, task = get_pair()
+    dev = PC.make_device(slm_cfg, slm_p,
+                         policy=OffloadPolicy(mode="all"),
+                         use_early_exit=False)
+    rng = np.random.default_rng(43)
+    vocab = slm_cfg.vocab
+
+    def engines_for(plen):
+        # a tight pool: ~3 live streams' worth of blocks on 8 slots
+        per_stream = -(-(plen + max_new + 8) // block_size) + 1
+        pool = 3 * per_stream
+        mk = lambda **kw: PC.make_engine(llm_cfg, llm_p, slots=slots,
+                                         cache_impl="paged",
+                                         block_size=block_size, **kw)
+        # the slo config differs only in scheduler policy/budgets, so it
+        # shares the swap engine (drained between runs; jit is per-engine)
+        swap_eng = mk(pool_blocks=pool, swap=True)
+        return pool, dict(recompute=mk(pool_blocks=pool),
+                          swap=swap_eng, slo=swap_eng)
+
+    eng_roomy = PC.make_engine(llm_cfg, llm_p, slots=slots,
+                               cache_impl="paged", block_size=block_size)
+    profiles = {p: engines_for(t)
+                for p, t in (("short", short_tokens), ("long", long_tokens))}
+
+    rows = []
+    for n in concurrency:
+        for profile, plen in (("short", short_tokens),
+                              ("long", long_tokens)):
+            prompts = [[int(t) for t in rng.integers(1, vocab - 1, plen)]
+                       for _ in range(n)]
+            pool, engs = profiles[profile]
+            r_ref = SY.run_synera(dev, eng_roomy, prompts, max_new,
+                                  concurrency=n)
+            slos = [StreamSLO(deadline_ms=5e3) if i % 2 == 0 else None
+                    for i in range(n)]
+            row = dict(concurrency=n, profile=profile,
+                       prompt_tokens=plen, pool_blocks=pool,
+                       tokens=sum(len(m.tokens) for m in r_ref.metrics))
+            for name, eng in engs.items():
+                # engines are reused across rows but the swap byte
+                # counters are engine-cumulative: report per-run deltas
+                sw = eng.swap_manager
+                out0 = sw.swap_out_bytes if sw else 0
+                in0 = sw.swap_in_bytes if sw else 0
+                t0 = time.time()
+                r = SY.run_synera(
+                    dev, eng, prompts, max_new, concurrency=n,
+                    preempt_policy="slo-aware" if name == "slo" else None,
+                    slos=slos if name == "slo" else None)
+                wall = time.time() - t0
+                st = r.extras["scheduler"]
+                assert r.outputs == r_ref.outputs, \
+                    f"{name} eviction must not change greedy token streams"
+                row[name] = dict(
+                    preemptions=st["preemptions"],
+                    recompute_evictions=st["recompute_evictions"],
+                    swap_evictions=st["swap_evictions"],
+                    preempted_refed_tokens=st["preempted_refed_tokens"],
+                    swap_out_bytes=st["swap_out_bytes"] - out0,
+                    swap_in_bytes=st["swap_in_bytes"] - in0,
+                    makespan_ms=st["sim_ms"],
+                    wall_s=wall)
+            rows.append(row)
+            print(f"conc={n:3d} {profile:5s} pool={pool:3d} "
+                  f"refed recompute={row['recompute']['preempted_refed_tokens']} "
+                  f"swap={row['swap']['preempted_refed_tokens']} "
+                  f"slo={row['slo']['preempted_refed_tokens']} "
+                  f"(swap_ev {row['swap']['swap_evictions']}, "
+                  f"slo_ev {row['slo']['swap_evictions']})", flush=True)
+    return dict(slots=slots, max_new=max_new, block_size=block_size,
+                long_tokens=long_tokens, short_tokens=short_tokens,
+                rows=rows)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
@@ -278,6 +388,9 @@ def main():
     ap.add_argument("--shared-streams", default="4,8",
                     help="stream counts for the shared-prefix sweep "
                          "('' to skip)")
+    ap.add_argument("--preempt-concurrency", default="8,32,128",
+                    help="stream counts for the preemption-pressure "
+                         "recompute/swap/slo sweep ('' to skip)")
     ap.add_argument("--prefix-blocks", type=int, default=4,
                     help="common system-prefix length in full KV blocks")
     ap.add_argument("--slots", type=int, default=8)
@@ -307,6 +420,11 @@ def main():
             streams=shared, max_new=4 if args.fast else 8,
             slots=args.slots, block_size=args.block_size,
             prefix_blocks=args.prefix_blocks)
+    if args.preempt_concurrency:
+        conc = tuple(int(s) for s in args.preempt_concurrency.split(","))
+        res["preempt_sweep"] = run_preempt_sweep(
+            concurrency=conc, max_new=4 if args.fast else 6,
+            slots=args.slots, block_size=args.block_size)
     with open(args.out, "w") as f:
         json.dump(res, f, indent=2)
     print(f"wrote {args.out}")

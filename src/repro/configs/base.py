@@ -108,6 +108,13 @@ class ModelConfig:
     # blocks across slots via ref-counted blocks; divergent writes into a
     # shared block fork a private copy (copy-on-write).
     share_prefix: bool = False
+    # Host swap tier (paged only): preempted streams may be gathered to
+    # host memory and scattered back instead of recompute-eviction when
+    # the modeled D2H+H2D round trip beats the modeled re-prefill.
+    kv_swap: bool = False
+    host_swap_blocks: int = 0    # host store cap in blocks (0 = unbounded)
+    # Eviction victim selection: "youngest" | "most-blocks" | "slo-aware"
+    preempt_policy: str = "youngest"
 
     # --- implementation knobs (hillclimb levers) ---
     attn_impl: str = "blocked"   # "naive" | "blocked" (online-softmax scan)

@@ -16,6 +16,7 @@ shared simulated clock (default: all streams arrive at admission).
 from __future__ import annotations
 
 import argparse
+import hashlib
 import json
 import sys
 
@@ -62,6 +63,25 @@ def main():
                     help="total blocks in the paged pool (default: dense "
                          "capacity, slots x s_max / block-size; smaller "
                          "pools trade memory for preemptions)")
+    ap.add_argument("--swap", action="store_true", default=None,
+                    help="paged cache only: enable the host-memory KV "
+                         "swap tier — preempted streams are gathered to "
+                         "host RAM and restored later instead of "
+                         "recompute-eviction when the modeled D2H+H2D "
+                         "round trip beats the modeled re-prefill "
+                         "(unset: cfg.kv_swap)")
+    ap.add_argument("--host-swap-blocks", type=int, default=None,
+                    help="host swap store capacity in KV blocks "
+                         "(0 = unbounded; unset: cfg.host_swap_blocks); "
+                         "victims that do not fit fall back to "
+                         "recompute-eviction")
+    ap.add_argument("--preempt-policy", default=None,
+                    choices=["youngest", "most-blocks", "slo-aware"],
+                    help="eviction victim selection when the paged pool "
+                         "runs dry: youngest admitted stream (the "
+                         "cfg.preempt_policy default), largest freeable "
+                         "block holder, or the stream with the most "
+                         "remaining TTFT/deadline slack")
     ap.add_argument("--share-prefix", action="store_true",
                     help="paged cache only: dedupe identical leading "
                          "full prompt blocks across streams (ref-counted "
@@ -94,13 +114,17 @@ def main():
             1, slm_cfg.vocab - 1, args.shared_prefix_tokens)]
         prompts = [common + list(p) for p in prompts]
     link = LinkModel(bandwidth_mbps=args.bandwidth_mbps)
+    if args.swap and args.cache_impl != "paged":
+        ap.error("--swap requires --cache-impl paged")
     eng = PC.make_engine(llm_cfg, llm_p, slots=args.slots,
                          attn_impl=args.attn_impl,
                          verify_top_k=args.verify_top_k,
                          cache_impl=args.cache_impl,
                          block_size=args.block_size,
                          pool_blocks=args.pool_blocks,
-                         share_prefix=args.share_prefix)
+                         share_prefix=args.share_prefix,
+                         swap=args.swap,
+                         host_swap_blocks=args.host_swap_blocks)
     concurrency = None if args.concurrency == 0 else args.concurrency
     arrivals = None
     if args.arrival_rate > 0:
@@ -135,21 +159,28 @@ def main():
     run = {
         "synera": lambda: SY.run_synera(dev, eng, prompts, args.max_new,
                                         concurrency=concurrency,
-                                        arrivals=arrivals),
+                                        arrivals=arrivals,
+                                        preempt_policy=args.preempt_policy),
         "edge": lambda: SY.run_edge_centric(dev, prompts, args.max_new),
         "cloud": lambda: SY.run_cloud_centric(eng, prompts, args.max_new,
                                               link=link),
         "hybrid": lambda: SY.run_hybrid(dev, eng, prompts, args.max_new,
                                         concurrency=concurrency,
-                                        arrivals=arrivals),
+                                        arrivals=arrivals,
+                                        preempt_policy=args.preempt_policy),
         "edgefm": lambda: SY.run_edgefm(dev, eng, prompts, args.max_new,
                                         link=link),
     }[args.mode]
     r = run()
     s = PC.score_outputs(task, evalset, r.outputs)
+    # digest of all token streams: two runs served identically (e.g. a
+    # roomy pool vs one forced to swap) must agree byte-for-byte
+    sha = hashlib.sha256(
+        json.dumps([[int(t) for t in o] for o in r.outputs]).encode()
+    ).hexdigest()[:16]
     summary = dict(mode=args.mode, n=len(prompts), quality=s["quality"],
                    copy_acc=s["copy_acc"], tbt_ms=r.tbt_ms, cost=r.cost,
-                   cloud_token_frac=r.cloud_token_frac)
+                   cloud_token_frac=r.cloud_token_frac, outputs_sha=sha)
     sched = r.extras.get("scheduler")
     if sched is not None:
         summary.update(
@@ -166,6 +197,14 @@ def main():
                 kv_bytes_peak=sched["kv_bytes_peak"],
                 kv_cache_bytes=sched["kv_cache_bytes"],
                 preemptions=sched["preemptions"],
+                preempt_policy=sched["preempt_policy"],
+                swap=sched["swap"],
+                recompute_evictions=sched["recompute_evictions"],
+                swap_evictions=sched["swap_evictions"],
+                swapped_blocks=sched["swapped_blocks"],
+                swap_out_bytes=sched["swap_out_bytes"],
+                swap_in_bytes=sched["swap_in_bytes"],
+                preempted_refed_tokens=sched["preempted_refed_tokens"],
                 share_prefix=sched["share_prefix"],
                 dedupe_hit_blocks=sched["dedupe_hit_blocks"],
                 cow_copies=sched["cow_copies"])

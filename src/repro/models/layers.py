@@ -341,6 +341,43 @@ def cache_copy_blocks(stack, src, dst):
     return out
 
 
+def cache_gather_blocks(stack, blocks):
+    """Gather pool blocks ``blocks[i]`` out of one paged kv stack (the
+    swap-out primitive: the host swap tier keeps the gathered k/v/pos
+    while the pool blocks go back to the free list).  The gathered
+    blocks' pool positions are invalidated in the same dispatch — a
+    swapped-out block must never read as valid through a future owner's
+    table.
+
+    ``blocks``: (m,) int32, -1-padded.  Padded entries gather a clamped
+    row (the caller ignores it) and invalidate nothing (the pad routes
+    the scatter out of bounds).  Returns ``(payload, new_stack)`` with
+    ``payload = {k/v/pos: (layers, m, bs, ...)}``.
+    """
+    nb = stack["k"].shape[1]
+    s = jnp.clip(blocks, 0, nb - 1)
+    payload = {key: stack[key][:, s] for key in ("k", "v", "pos")}
+    inv = jnp.where(blocks >= 0, blocks, nb)       # OOB pad: scatter drops
+    new = dict(stack)
+    new["pos"] = stack["pos"].at[:, inv].set(-1)
+    return payload, new
+
+
+def cache_scatter_blocks(stack, blocks, payload):
+    """Scatter a swapped-out payload back into pool blocks ``blocks[i]``
+    of one paged kv stack (the swap-in primitive; k/v/pos land together,
+    so the restored blocks are bit-identical to what was gathered).
+    ``blocks``: (m,) int32, -1-padded; padded pairs route out of bounds
+    and are dropped, exactly like :func:`cache_copy_blocks`."""
+    nb = stack["k"].shape[1]
+    d = jnp.where(blocks >= 0, blocks, nb)
+    new = dict(stack)
+    for key in ("k", "v", "pos"):
+        new[key] = stack[key].at[:, d].set(payload[key].astype(
+            stack[key].dtype))
+    return new
+
+
 def paged_kv_view(cache):
     """Gather a slot-major (B, s_max, ...) view of the paged pool — the
     XLA read path.  Unmapped table entries (-1) are forced out of bounds

@@ -267,6 +267,45 @@ def copy_cache_blocks(cache, src, dst):
     return walk(cache)
 
 
+def swap_out_blocks(cache, blocks):
+    """Host-swap gather over a whole paged cache: pull pool blocks
+    ``blocks[i]`` (k/v/pos) out of every paged kv stack and invalidate
+    their pool positions, in one jitted dispatch (the engine donates the
+    cache).  Returns ``(payload, new_cache)``; ``payload`` mirrors the
+    cache structure but holds only the gathered stacks — the swap
+    manager moves it to host memory and later feeds it back through
+    :func:`swap_in_blocks`."""
+
+    def walk(c):
+        if "block_tables" in c:
+            return L.cache_gather_blocks(c, blocks)
+        pays, news = {}, {}
+        for k, v in c.items():
+            if isinstance(v, dict):
+                pays[k], news[k] = walk(v)
+            else:
+                news[k] = v
+        return pays, news
+
+    return walk(cache)
+
+
+def swap_in_blocks(cache, blocks, payload):
+    """Host-swap scatter over a whole paged cache: restore a payload
+    gathered by :func:`swap_out_blocks` into (freshly allocated) pool
+    blocks ``blocks[i]`` across every paged kv stack, one jitted,
+    donated dispatch.  The restored blocks are bit-identical to the
+    swapped-out content."""
+
+    def walk(c, p):
+        if "block_tables" in c:
+            return L.cache_scatter_blocks(c, blocks, p)
+        return {k: walk(v, p[k]) if isinstance(v, dict) else v
+                for k, v in c.items()}
+
+    return walk(cache, payload)
+
+
 # ---------------------------------------------------------------------------
 # Layer application
 # ---------------------------------------------------------------------------

@@ -106,6 +106,11 @@ class BlockAllocator:
         self._index: dict[int, int] = {}
         self._rindex: dict[int, int] = {}
         self._contents: dict[int, tuple] = {}
+        # canonical-chain shadows: content-duplicate blocks (e.g. the
+        # unmatched last full block of an identical prompt) registered
+        # under the chain hash an earlier block already owns; when the
+        # primary dies, a live shadow is promoted so the share survives
+        self._shadow: dict[int, list[int]] = {}
         # blocks registered whose content the imminent prompt feed will
         # write: that first write realizes the registered content and
         # must neither fork nor unregister
@@ -113,6 +118,7 @@ class BlockAllocator:
         # telemetry
         self.dedupe_hit_blocks = 0   # cumulative blocks adopted via index
         self.cow_copies = 0          # cumulative copy-on-write forks
+        self.shadow_promotions = 0   # duplicates promoted to primary
 
     @property
     def free_blocks(self) -> int:
@@ -228,21 +234,40 @@ class BlockAllocator:
         n_full = min(len(tokens) // self.block_size,
                      self.max_blocks_per_slot)
         for j, (h, prev, blk) in enumerate(self._chain(tokens, n_full)):
-            if h in self._index:
-                continue                 # chain already published
             bid = int(self.table[slot, j])
             if bid < 0 or bid in self._rindex:
-                continue
-            self._index[h] = bid
+                continue                 # adopted / already registered
             self._rindex[bid] = h
             self._contents[bid] = (prev, blk)
             self._fill.add(bid)
+            if h not in self._index:
+                self._index[h] = bid
+            else:
+                # canonical-chain registration: the chain hash already
+                # has a primary (e.g. this prompt's last full block sat
+                # past the len-1 match cap, so a content duplicate was
+                # allocated).  Recording the duplicate under the SAME
+                # canonical hash lets _unregister promote it when the
+                # primary dies — without it, a content-identical prefix
+                # would miss a share that still physically exists.
+                self._shadow.setdefault(h, []).append(bid)
 
     def _unregister(self, bid: int) -> None:
         h = self._rindex.pop(bid, None)
         if h is not None:
-            self._index.pop(h, None)
             self._contents.pop(bid, None)
+            shadows = self._shadow.get(h)
+            if self._index.get(h) == bid:
+                self._index.pop(h, None)
+                if shadows:
+                    # promote a live content duplicate: the share
+                    # survives the primary block's death
+                    self._index[h] = shadows.pop(0)
+                    self.shadow_promotions += 1
+            elif shadows and bid in shadows:
+                shadows.remove(bid)
+            if shadows is not None and not shadows:
+                self._shadow.pop(h, None)
         self._fill.discard(bid)
 
     def cow_demand(self, slot: int, lo: int, hi: int) -> int:
@@ -421,7 +446,9 @@ class CloudEngine:
                  feed_buckets: tuple = DEFAULT_FEED_BUCKETS,
                  cache_impl: str | None = None, block_size: int | None = None,
                  pool_blocks: int | None = None,
-                 share_prefix: bool | None = None):
+                 share_prefix: bool | None = None,
+                 swap: bool | None = None,
+                 host_swap_blocks: int | None = None):
         self.cfg = cfg
         self.params = params
         self.max_slots = max_slots
@@ -439,6 +466,12 @@ class CloudEngine:
         self.block_size = block_size or getattr(cfg, "kv_block_size", 16)
         self.allocator: BlockAllocator | None = None
         self.share_prefix = False
+        self.swap_manager = None
+        want_swap = bool(swap if swap is not None
+                         else getattr(cfg, "kv_swap", False))
+        if want_swap and self.cache_impl != "paged":
+            raise ValueError("swap=True requires cache_impl='paged' "
+                             "(dense caches have no block pool to swap)")
         if self.cache_impl == "paged":
             max_bps = -(-s_max // self.block_size)
             nb = (pool_blocks if pool_blocks is not None
@@ -458,6 +491,13 @@ class CloudEngine:
             self._copy_blocks = jax.jit(M.copy_cache_blocks,
                                         donate_argnums=0)
             self._tables_dirty = False
+            if want_swap:
+                # deferred import: swap.py imports this module
+                from repro.serving.swap import HostSwapManager
+                hb = (host_swap_blocks if host_swap_blocks is not None
+                      else getattr(cfg, "host_swap_blocks", 0))
+                self.swap_manager = HostSwapManager(self,
+                                                    max_host_blocks=hb)
         else:
             self.cache = M.init_cache(cfg, max_slots, s_max)
         self._step = jax.jit(
@@ -650,9 +690,12 @@ class CloudEngine:
                         kv_bytes_in_use=total, kv_bytes_peak=total,
                         free_blocks=0, used_blocks=0, peak_used_blocks=0,
                         n_blocks=0, block_size=0, share_prefix=False,
-                        shared_blocks=0, dedupe_hit_blocks=0, cow_copies=0)
+                        shared_blocks=0, dedupe_hit_blocks=0, cow_copies=0,
+                        swap=False, swapped_blocks=0, swap_out_bytes=0,
+                        swap_in_bytes=0)
         a = self.allocator
         bb = self.block_bytes()
+        sw = self.swap_manager
         return dict(cache_impl="paged", kv_cache_bytes=total,
                     kv_bytes_in_use=a.used_blocks * bb,
                     kv_bytes_peak=a.peak_used * bb,
@@ -661,7 +704,11 @@ class CloudEngine:
                     block_size=a.block_size, share_prefix=a.share_prefix,
                     shared_blocks=a.shared_blocks,
                     dedupe_hit_blocks=a.dedupe_hit_blocks,
-                    cow_copies=a.cow_copies)
+                    cow_copies=a.cow_copies,
+                    swap=sw is not None,
+                    swapped_blocks=sw.swapped_blocks if sw else 0,
+                    swap_out_bytes=sw.swap_out_bytes if sw else 0,
+                    swap_in_bytes=sw.swap_in_bytes if sw else 0)
 
     # -- bucketing ------------------------------------------------------
     def _bucket_of(self, n: int) -> int:

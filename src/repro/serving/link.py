@@ -96,6 +96,22 @@ class CloudLatencyModel:
     def host_transfer_ms(self, nbytes: int) -> float:
         return nbytes / (self.host_link_gbps * 1e9) * 1e3
 
+    # -- swap-vs-recompute disposition (serving/swap.py) ----------------
+    def swap_roundtrip_ms(self, nbytes: int) -> float:
+        """Modeled cost of evicting a stream to host memory and later
+        restoring it: the D2H gather plus the H2D scatter, both charged
+        through ``host_link_gbps`` on the measured block bytes."""
+        return 2.0 * self.host_transfer_ms(nbytes)
+
+    def refeed_ms(self, n_tokens: int, chunk: int) -> float:
+        """Modeled cost of recompute-eviction: the victim's accepted
+        prefix re-feeds as from-scratch partial prefills, i.e. about
+        ``ceil(n/chunk)`` extra verify iterations' fixed cost plus the
+        per-token compute."""
+        n_iters = -(-max(int(n_tokens), 0) // max(int(chunk), 1))
+        return (n_iters * (self.ms_base + self.ms_scheduler)
+                + n_tokens * self.ms_per_token)
+
 
 @dataclass
 class CostModel:

@@ -39,6 +39,14 @@ batch it advances the clock by the iteration's modeled cost — so
 completion times measured on this clock reflect genuine queueing behind
 other streams' work, not a per-request private accumulator.
 
+Memory pressure (paged engines): verify iterations reserve their block
+growth and, when the pool runs dry, evict a victim chosen by the
+pluggable policy (serving/swap.py: youngest | most-blocks | slo-aware)
+with a per-victim disposition — host-swap its blocks (restored
+bit-identical later; nothing refeeds) when the modeled D2H+H2D round
+trip beats the modeled re-prefill, recompute-eviction otherwise.
+Swapped streams are restored FIFO ahead of new admissions.
+
 The scheduler also supports plain decode streams (the cloud-centric
 baseline) through ``decode_iteration``.
 """
@@ -52,6 +60,7 @@ import numpy as np
 from repro.core import verifier as V
 from repro.serving.engine import CloudEngine
 from repro.serving.link import CloudLatencyModel, SimClock
+from repro.serving.swap import PREEMPT_POLICIES, pick_victim
 
 
 @dataclass
@@ -64,6 +73,9 @@ class PrefillRequest:
     # admission (share_prefix): already cached, so the batch feeds (and
     # the latency model charges) only tokens[shared:]
     shared: int = 0
+    # optional per-stream latency budgets (serving/swap.StreamSLO),
+    # consumed by the "slo-aware" preemption policy
+    slo: object = None
 
 
 @dataclass
@@ -103,10 +115,21 @@ class VerificationAwareScheduler:
                  latency: CloudLatencyModel | None = None,
                  rng: np.random.Generator | None = None,
                  clock: SimClock | None = None,
-                 fused: bool = True):
+                 fused: bool = True,
+                 preempt_policy: str | None = None):
         self.engine = engine
         self.chunk = chunk
         self.fused = fused
+        policy = (preempt_policy
+                  or getattr(getattr(engine, "cfg", None),
+                             "preempt_policy", None)
+                  or "youngest")
+        if policy not in PREEMPT_POLICIES:
+            raise ValueError(f"unknown preempt_policy {policy!r}; "
+                             f"have {PREEMPT_POLICIES}")
+        self.preempt_policy = policy
+        # host swap tier (engine-owned; None without --swap / kv_swap)
+        self.swap = getattr(engine, "swap_manager", None)
         self.latency = latency or CloudLatencyModel()
         self.rng = rng or np.random.default_rng(0)
         self.clock = clock or SimClock()
@@ -125,10 +148,16 @@ class VerificationAwareScheduler:
         self.verify_tokens_fed: list[int] = []  # tokens packed per verify iter
         self._req_counter = 0
         # paged-cache policy state: admission order (for youngest-first
-        # preemption) and preemption telemetry
+        # preemption), per-slot prompt/SLO metadata (swap re-matching and
+        # slo-aware victim selection) and preemption telemetry
         self.slot_age = np.full(engine.max_slots, -1, np.int64)
         self._admit_counter = 0
-        self.preemptions = 0
+        self.slot_prompt: dict[int, np.ndarray] = {}
+        self.slot_slo: dict[int, tuple] = {}   # slot -> (ttft_abs, ddl_abs)
+        self._first_emit: set[int] = set()     # slots past their first emit
+        self.recompute_evictions = 0
+        self.swap_evictions = 0
+        self.swap_expirations = 0   # swap-ins degraded: shared lead died
         self.preempted_refed_tokens = 0
         # consecutive verify iterations that deferred EVERY chunk with
         # nothing evicted and nothing else executing — a growing streak
@@ -139,6 +168,24 @@ class VerificationAwareScheduler:
     @property
     def sim_ms(self) -> float:
         return self.clock.now_ms
+
+    @property
+    def preemptions(self) -> int:
+        """Total evictions, whatever the disposition."""
+        return self.recompute_evictions + self.swap_evictions
+
+    def slot_slack_ms(self, slot: int, now: float) -> float:
+        """Remaining SLO budget of the stream on ``slot``: time to its
+        TTFT bound (until the first verified emission) or completion
+        deadline, whichever binds.  ``inf`` without an SLO — such
+        streams are the preferred victims under ``slo-aware``."""
+        slo = self.slot_slo.get(slot)
+        if slo is None:
+            return float("inf")
+        ttft_abs, deadline_abs = slo
+        lim = (deadline_abs if slot in self._first_emit
+               else min(ttft_abs, deadline_abs))
+        return lim - now
 
     def next_req_id(self) -> int:
         """Globally unique request id (unique per scheduler, so events
@@ -167,6 +214,11 @@ class VerificationAwareScheduler:
         self.verify_q.append(req)
 
     def release_slot(self, slot: int):
+        if self.swap is not None:
+            self.swap.drop(slot)       # session over: host payload gone
+        self.slot_prompt.pop(slot, None)
+        self.slot_slo.pop(slot, None)
+        self._first_emit.discard(slot)
         self.engine.reset_slot(slot)
         self.cloud_len[slot] = 0
         self.slot_age[slot] = -1
@@ -183,6 +235,7 @@ class VerificationAwareScheduler:
         (shared-clock semantics), fast-forwards the clock to the next
         arrival and returns [] — callers loop while ``has_work()``.
         """
+        self._swap_in_ready()
         now = self.clock.now_ms
         if self.prefill_q and self.free_slots and \
                 any(r.arrival_ms <= now for r in self.prefill_q):
@@ -209,6 +262,16 @@ class VerificationAwareScheduler:
         return []
 
     # -- prefill (lines 5-11) ------------------------------------------
+    def _swap_in_reserve(self) -> int:
+        """Blocks fresh admissions must leave untouched for the
+        FIFO-head swapped stream: without this, a continuous arrival
+        stream could consume every freed block the moment it appears
+        and starve a large swapped stream's return indefinitely."""
+        if self.swap is None:
+            return 0
+        slots = self.swap.swapped_slots
+        return self.swap.blocks_needed(slots[0]) if slots else 0
+
     def _prefill_iteration(self, now: float) -> list[SchedulerEvent]:
         alloc = getattr(self.engine, "allocator", None)
         blocks_exhausted = False
@@ -250,13 +313,20 @@ class VerificationAwareScheduler:
                         f"pool_blocks")
                 matched = alloc.match_prefix(req.tokens)
                 need = full_need - len(matched)
-                if need > alloc.free_blocks:
+                if need > alloc.free_blocks - self._swap_in_reserve():
                     blocks_exhausted = True
                     rest.append(req)
                     continue
             req.slot = self.free_slots.popleft()
             self._admit_counter += 1
             self.slot_age[req.slot] = self._admit_counter
+            # prompt retained for the swap tier (shared-lead re-matching),
+            # SLO budgets anchored at arrival for slo-aware preemption
+            self.slot_prompt[req.slot] = np.asarray(req.tokens)
+            if req.slo is not None:
+                self.slot_slo[req.slot] = (
+                    req.arrival_ms + req.slo.ttft_ms,
+                    req.arrival_ms + req.slo.deadline_ms)
             if alloc is not None:
                 # allocate (and prefix-share) eagerly so the request
                 # admitted next in this same loop sees the live free
@@ -334,6 +404,8 @@ class VerificationAwareScheduler:
         for req in self.active_verify:
             if req.slot in used_slots:
                 continue  # one chunk per slot per iteration
+            if self._slot_swapped(req.slot):
+                continue  # cache on the host: waits for swap-in
             seq = np.concatenate([req.uncached, req.draft]).astype(np.int32)
             n = min(C, len(seq) - req.fed)
             if n <= 0:
@@ -441,9 +513,9 @@ class VerificationAwareScheduler:
                 self._defer_streak = 0
                 return True
             victim = self._pick_victim()
-            if victim is not None:
-                self._preempt_slot(victim, feeding, tokens, positions,
-                                   targets, sel_idx, kept)
+            if victim is not None and self._evict(victim, feeding, tokens,
+                                                  positions, targets,
+                                                  sel_idx, kept):
                 evicted = True
                 continue
             # No evictable stream (the only holder is protected or not
@@ -502,9 +574,20 @@ class VerificationAwareScheduler:
                    for r in list(self.active_verify) + list(self.verify_q)
                    if r.slot == slot)
 
+    def _slot_swapped(self, slot: int) -> bool:
+        """Whether ``slot``'s KV lives in the host store right now (the
+        manager's stream table is the single source of truth)."""
+        return self.swap is not None and self.swap.holds(slot)
+
+    def _swap_possible(self, slot: int) -> bool:
+        return self.swap is not None and self.swap.plan(slot) is not None
+
     def _pick_victim(self) -> int | None:
-        """Youngest (most recently admitted) block-holding slot, never
-        the oldest holder, and only restartable streams."""
+        """Block-holding victim by the configured policy (never the
+        oldest holder — forward progress).  A candidate must either be
+        restartable (recompute-eviction re-derives its partial prefill
+        from ``VerifyRequest.seq``) or swappable (the host tier keeps
+        its state, no restart needed)."""
         alloc = self.engine.allocator
         holders = [s for s in range(self.engine.max_slots)
                    if alloc.n_blocks_of[s] > 0]
@@ -512,17 +595,72 @@ class VerificationAwareScheduler:
             return None
         oldest = min(holders, key=lambda s: self.slot_age[s])
         cands = [s for s in holders
-                 if s != oldest and self._slot_restartable(s)]
+                 if s != oldest and (self._slot_restartable(s)
+                                     or self._swap_possible(s))]
         if not cands:
             return None
-        return max(cands, key=lambda s: self.slot_age[s])
+        return pick_victim(self.preempt_policy, cands, self)
 
-    def _preempt_slot(self, slot: int, feeding, tokens, positions,
-                      targets, sel_idx, kept) -> None:
-        """Evict ``slot``: blocks back to the pool, cloud frontier to 0,
-        pending requests rewound to refeed from scratch; if the slot was
-        in the current batch, its chunk is withdrawn."""
-        self.engine.reset_slot(slot)            # frees + invalidates blocks
+    def _evict(self, slot: int, feeding, tokens, positions, targets,
+               sel_idx, kept) -> bool:
+        """Evict ``slot`` by the cheaper disposition: swap to the host
+        tier when the modeled D2H+H2D round trip on its measured block
+        bytes undercuts the modeled re-prefill of its accepted frontier
+        (or when the stream cannot restart at all), recompute-eviction
+        otherwise.  Returns True when blocks actually came back."""
+        if self.swap is not None:
+            p = self.swap.plan(slot)
+            if p is not None:
+                nbytes = p[2]
+                frontier = int(self.cloud_len[slot])
+                swap_ms = self.latency.swap_roundtrip_ms(nbytes)
+                redo_ms = self.latency.refeed_ms(frontier, self.chunk)
+                if swap_ms < redo_ms or not self._slot_restartable(slot):
+                    moved = self.swap.swap_out(
+                        slot, self.slot_prompt.get(slot), frontier)
+                    if moved is not None:
+                        self.swap_evictions += 1
+                        self.clock.advance(
+                            self.latency.host_transfer_ms(moved))
+                        for entry in feeding:
+                            if entry[0].slot == slot:
+                                self._withdraw(entry, feeding, tokens,
+                                               positions, targets, sel_idx,
+                                               kept)
+                                break
+                        return True
+        if not self._slot_restartable(slot):
+            return False               # cannot swap, cannot restart: defer
+        self._preempt_slot(slot, feeding, tokens, positions, targets,
+                           sel_idx, kept)
+        return True
+
+    def _swap_in_ready(self) -> None:
+        """Restore swapped-out streams (FIFO over swap-out order) while
+        the pool can take them — before admission, so returning streams
+        are not starved by fresh prompts.  A stream whose shared lead
+        expired from the prefix index while it was on the host (its
+        sibling died) degrades to recompute-eviction: the host payload
+        alone cannot rebuild the missing prefix KV."""
+        if self.swap is None:
+            return
+        alloc = self.engine.allocator
+        for slot in self.swap.swapped_slots:
+            if self.swap.blocks_needed(slot) > alloc.free_blocks:
+                break                  # FIFO: no bypass (anti-starvation)
+            res = self.swap.swap_in(slot)
+            if res is None:
+                self.swap_expirations += 1
+                self._rewind_slot(slot)
+                continue
+            frontier, nbytes = res
+            self.cloud_len[slot] = frontier
+            self.clock.advance(self.latency.host_transfer_ms(nbytes))
+
+    def _rewind_slot(self, slot: int) -> None:
+        """Recompute-eviction bookkeeping: cloud frontier to 0, pending
+        requests rewound to refeed from scratch (re-derived from
+        ``req.seq`` — the from-scratch partial prefill)."""
         self.cloud_len[slot] = 0
         self.last_row.pop(slot, None)
         for r in list(self.active_verify) + list(self.verify_q):
@@ -532,12 +670,20 @@ class VerificationAwareScheduler:
                 r.rows = []
                 r.start_pos = 0
                 r.uncached = np.asarray(r.seq, np.int64)
+
+    def _preempt_slot(self, slot: int, feeding, tokens, positions,
+                      targets, sel_idx, kept) -> None:
+        """Recompute-evict ``slot``: blocks back to the pool, cloud
+        frontier to 0, pending requests rewound to refeed from scratch;
+        if the slot was in the current batch, its chunk is withdrawn."""
+        self.engine.reset_slot(slot)            # frees + invalidates blocks
+        self._rewind_slot(slot)
         for entry in feeding:
             if entry[0].slot == slot:
                 self._withdraw(entry, feeding, tokens, positions, targets,
                                sel_idx, kept)
                 break
-        self.preemptions += 1
+        self.recompute_evictions += 1
 
     def _finish_verify(self, req: VerifyRequest) -> SchedulerEvent:
         gamma = len(req.draft)
@@ -590,6 +736,7 @@ class VerificationAwareScheduler:
         # is idempotent per position).
         accepted_abs = (req.start_pos + len(req.uncached) + res.n_accepted)
         self.cloud_len[req.slot] = accepted_abs
+        self._first_emit.add(req.slot)   # TTFT budget met: deadline governs
         return SchedulerEvent("verify_done", req.req_id, req.slot, result=res)
 
     # -- plain decode (cloud-centric baseline) ---------------------------

@@ -84,6 +84,15 @@ class ServerStats:
     kv_bytes_peak: int = 0
     preemptions: int = 0
     preempted_refed_tokens: int = 0
+    # -- eviction disposition (host swap tier, serving/swap.py) --
+    preempt_policy: str = "youngest"
+    swap: bool = False                 # host swap tier enabled
+    recompute_evictions: int = 0       # evictions that refeed from scratch
+    swap_evictions: int = 0            # evictions parked in host memory
+    swap_expirations: int = 0          # swap-ins degraded: shared lead died
+    swapped_blocks: int = 0            # blocks currently in the host store
+    swap_out_bytes: int = 0            # cumulative D2H payload bytes
+    swap_in_bytes: int = 0             # cumulative H2D payload bytes
     # -- prefix sharing (share_prefix on a paged engine) --
     share_prefix: bool = False
     shared_blocks: int = 0             # blocks currently mapped by >1 slot
@@ -107,6 +116,7 @@ class DeviceSession:
     arrival_abs_ms: float = 0.0    # absolute arrival of in-flight verify
     prefill_rid: int | None = None  # in-flight prompt prefill request id
     slots_used: list = field(default_factory=list)
+    slo: object = None             # StreamSLO budgets (slo-aware preemption)
 
     @property
     def done(self) -> bool:
@@ -119,13 +129,15 @@ class SyneraServer:
     def __init__(self, device: DeviceRuntime, engine: CloudEngine, *,
                  chunk: int = 32, sampling: str = "greedy",
                  latency: CloudLatencyModel | None = None,
-                 clock: SimClock | None = None):
+                 clock: SimClock | None = None,
+                 preempt_policy: str | None = None):
         self.device = device
         self.engine = engine
         self.sampling = sampling
         self.clock = clock or SimClock()
         self.sched = VerificationAwareScheduler(
-            engine, chunk=chunk, latency=latency, clock=self.clock)
+            engine, chunk=chunk, latency=latency, clock=self.clock,
+            preempt_policy=preempt_policy)
         self.sessions: list[DeviceSession] = []
         self._by_req: dict[int, tuple[DeviceSession, str]] = {}
         self._fresh: deque[DeviceSession] = deque()  # opened, not yet run
@@ -134,16 +146,19 @@ class SyneraServer:
     # ------------------------------------------------------------------
     def open_session(self, prompt, max_new: int, *,
                      arrival_ms: float | None = None,
-                     profile_mode: bool = False) -> DeviceSession:
+                     profile_mode: bool = False,
+                     slo: object = None) -> DeviceSession:
         """Register a new device stream.  ``arrival_ms`` anchors the
         stream's device timeline on the shared clock; default is "now"
-        (the stream starts when it is admitted)."""
+        (the stream starts when it is admitted).  ``slo`` optionally
+        carries the stream's latency budgets (``swap.StreamSLO``) for
+        the slo-aware preemption policy."""
         start = self.clock.now_ms if arrival_ms is None else arrival_ms
         gen = self.device.generate_steps(prompt, max_new, use_cloud=True,
                                          profile_mode=profile_mode)
-        client = CloudClient(self.sched, sampling=self.sampling)
+        client = CloudClient(self.sched, sampling=self.sampling, slo=slo)
         s = DeviceSession(sid=len(self.sessions), gen=gen, client=client,
-                          start_ms=start)
+                          start_ms=start, slo=slo)
         self.sessions.append(s)
         self._fresh.append(s)
         return s
@@ -247,10 +262,12 @@ class SyneraServer:
     def serve(self, prompts, max_new: int, *,
               concurrency: int | None = None,
               arrivals: list[float] | None = None,
-              profile_mode: bool = False) -> list:
+              profile_mode: bool = False,
+              slos: list | None = None) -> list:
         """Admission-controlled convenience driver: keep at most
         ``concurrency`` sessions open (None = all at once), optionally
-        anchoring each stream at an absolute ``arrivals[i]`` offset.
+        anchoring each stream at an absolute ``arrivals[i]`` offset
+        and attaching per-stream ``slos[i]`` latency budgets.
         Returns per-stream DeviceMetrics in prompt order."""
         if concurrency is not None and concurrency < 1:
             raise ValueError(f"concurrency must be >= 1 or None "
@@ -264,7 +281,9 @@ class SyneraServer:
                 arr = None if arrivals is None else arrivals[idx]
                 s = self.open_session(prompts[idx], max_new,
                                       arrival_ms=arr,
-                                      profile_mode=profile_mode)
+                                      profile_mode=profile_mode,
+                                      slo=None if slos is None
+                                      else slos[idx])
                 active.append(s)
                 idx += 1
             self.step()
@@ -307,6 +326,14 @@ class SyneraServer:
             kv_bytes_peak=pool["kv_bytes_peak"],
             preemptions=sched.preemptions,
             preempted_refed_tokens=sched.preempted_refed_tokens,
+            preempt_policy=sched.preempt_policy,
+            swap=pool["swap"],
+            recompute_evictions=sched.recompute_evictions,
+            swap_evictions=sched.swap_evictions,
+            swap_expirations=sched.swap_expirations,
+            swapped_blocks=pool["swapped_blocks"],
+            swap_out_bytes=pool["swap_out_bytes"],
+            swap_in_bytes=pool["swap_in_bytes"],
             share_prefix=pool["share_prefix"],
             shared_blocks=pool["shared_blocks"],
             dedupe_hit_blocks=pool["dedupe_hit_blocks"],

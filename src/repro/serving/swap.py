@@ -1,0 +1,259 @@
+"""Host-memory KV swap tier + preemption policy layer (ROADMAP:
+swap-based preemption, SLO-aware victim selection).
+
+Before this module the paged pool had one relief valve under pressure:
+recompute-eviction — the victim's cloud frontier rewinds to zero and
+its whole accepted prefix re-feeds as a from-scratch partial prefill,
+burning verifier FLOPs and stalling the device pipeline the paper's
+stall-free design is meant to avoid.  The swap tier adds a second
+disposition: move the victim's pool blocks to a host-side block store
+(one jitted, donated gather per stream — ``models/model.swap_out_blocks``
+over every layer stack, like ``copy_cache_blocks``) and scatter them
+back into freshly allocated blocks when pressure clears
+(``swap_in_blocks``).  Restored blocks are bit-identical, so token
+streams are unchanged; only the modeled clock pays the D2H+H2D round
+trip through ``CloudLatencyModel.host_link_gbps``.
+
+Two policy decisions live here, both consumed by the scheduler:
+
+* **Victim selection** (:func:`pick_victim`): ``youngest`` (the
+  pre-swap behaviour and the identity oracle), ``most-blocks`` (free
+  the most memory per eviction), ``slo-aware`` (evict the stream with
+  the most remaining TTFT/deadline slack; streams without an SLO are
+  preferred victims).
+* **Disposition** (swap vs recompute, decided by the scheduler per
+  victim): swap when the modeled round trip
+  (``latency.swap_roundtrip_ms`` on the victim's measured block bytes)
+  undercuts the modeled re-prefill (``latency.refeed_ms`` on its
+  accepted frontier), or when the victim cannot restart at all
+  (requests without ``seq``).
+
+Prefix-sharing interaction: blocks mapped by a sibling (refcount > 1)
+never leave the pool — the victim only *drops its reference* and
+records how many leading blocks it rode on.  At swap-in those blocks
+are re-adopted from the prefix index (ref++ again) when the share still
+exists; if the sibling has meanwhile died and taken the blocks with it,
+the swap-in degrades to recompute-eviction for that stream (the host
+payload alone cannot rebuild the missing prefix KV).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.serving.engine import BlockPoolExhausted, _call_donated
+
+PREEMPT_POLICIES = ("youngest", "most-blocks", "slo-aware")
+
+
+@dataclass(frozen=True)
+class StreamSLO:
+    """Per-stream latency budgets, relative to the stream's arrival on
+    the shared clock.  ``ttft_ms`` bounds time to the first verified
+    emission, ``deadline_ms`` time to stream completion; ``inf`` means
+    unconstrained (the stream is a preferred eviction victim under the
+    ``slo-aware`` policy)."""
+    ttft_ms: float = float("inf")
+    deadline_ms: float = float("inf")
+
+
+def pick_victim(policy: str, cands: list[int], sched) -> int:
+    """Choose the eviction victim among candidate slots (all hold pool
+    blocks, none is the protected oldest holder).  Ties break toward
+    the youngest stream, which keeps ``youngest`` the exact pre-policy
+    behaviour."""
+    age = sched.slot_age
+    if policy == "youngest":
+        return max(cands, key=lambda s: age[s])
+    if policy == "most-blocks":
+        a = sched.engine.allocator
+
+        def freeable(s):
+            # only sole-owned blocks actually return to the pool;
+            # ref>1 shared-lead blocks merely drop a reference
+            return sum(1 for j in range(int(a.n_blocks_of[s]))
+                       if int(a.ref[int(a.table[s, j])]) == 1)
+
+        return max(cands, key=lambda s: (freeable(s), age[s]))
+    if policy == "slo-aware":
+        now = sched.clock.now_ms
+        return max(cands, key=lambda s: (sched.slot_slack_ms(s, now),
+                                         age[s]))
+    raise ValueError(
+        f"unknown preemption policy {policy!r}; have {PREEMPT_POLICIES}")
+
+
+@dataclass
+class SwappedStream:
+    """Host-side metadata for one swapped-out stream: the block-table
+    shape it had (total blocks, how many leading ones were shared), the
+    cloud frontier to restore, and the gathered k/v/pos payload."""
+    slot: int
+    frontier: int                  # cloud_len at swap-out
+    n_blocks: int                  # blocks the slot held (incl. shared lead)
+    shared_lead: int               # leading blocks left in-pool (ref dropped)
+    n_swap: int                    # blocks resident on the host
+    nbytes: int                    # modeled payload bytes (n_swap x block)
+    probe: tuple                   # tokens re-matching the shared lead
+    payload: object = None         # host numpy pytree (k/v/pos per stack)
+
+
+class HostSwapManager:
+    """Host-side block store for swapped-out streams.
+
+    Mechanism only: the scheduler decides *who* is evicted and *whether*
+    swap beats recompute; this class executes the transfers (jitted,
+    donated, one dispatch across all layer stacks per direction, fixed
+    ``(max_bps,)`` plans so jit specialization is O(1)) and keeps the
+    per-stream metadata.  ``max_host_blocks`` caps the store (0 =
+    unbounded); a victim that does not fit falls back to recompute.
+    """
+
+    def __init__(self, engine, max_host_blocks: int = 0):
+        self.engine = engine
+        self.max_host_blocks = int(max_host_blocks)
+        self._streams: dict[int, SwappedStream] = {}   # slot -> stream, FIFO
+        self._gather = jax.jit(M.swap_out_blocks, donate_argnums=0)
+        self._scatter = jax.jit(M.swap_in_blocks, donate_argnums=0)
+        # telemetry (cumulative; pool_stats / ServerStats)
+        self.swap_out_bytes = 0
+        self.swap_in_bytes = 0
+        self.expired_shares = 0
+
+    # -- introspection --------------------------------------------------
+    @property
+    def swapped_blocks(self) -> int:
+        """Blocks currently resident in the host store."""
+        return sum(st.n_swap for st in self._streams.values())
+
+    @property
+    def swapped_slots(self) -> list[int]:
+        """Swapped-out slots in swap-out (FIFO) order."""
+        return list(self._streams)
+
+    def holds(self, slot: int) -> bool:
+        return slot in self._streams
+
+    def blocks_needed(self, slot: int) -> int:
+        """Fresh pool blocks a swap-in of ``slot`` must allocate (the
+        shared lead re-adopts from the index at no block cost)."""
+        return self._streams[slot].n_swap
+
+    def plan(self, slot: int) -> tuple[int, int, int] | None:
+        """Whether ``slot`` can swap out, and at what cost: returns
+        ``(shared_lead, n_swap, nbytes)`` or None when swap is not
+        possible — no blocks, already swapped, an interior (non-leading)
+        shared block (only leading prompt blocks can re-adopt), or the
+        host store is full."""
+        a = self.engine.allocator
+        n = int(a.n_blocks_of[slot])
+        if n == 0 or slot in self._streams:
+            return None
+        bids = [int(a.table[slot, j]) for j in range(n)]
+        shared = [j for j, b in enumerate(bids) if int(a.ref[b]) > 1]
+        if shared != list(range(len(shared))):
+            return None
+        n_swap = n - len(shared)
+        if self.max_host_blocks and \
+                self.swapped_blocks + n_swap > self.max_host_blocks:
+            return None
+        return len(shared), n_swap, n_swap * self.engine.block_bytes()
+
+    # -- transfers ------------------------------------------------------
+    def swap_out(self, slot: int, tokens, frontier: int) -> int | None:
+        """Evict ``slot`` to the host store: gather its unshared blocks
+        (k/v/pos across every layer stack, one donated dispatch that
+        also invalidates their pool positions), drop its reference on
+        shared-lead blocks, and return all its pool blocks to the free
+        list.  ``tokens`` must cover the shared lead (the stream's
+        prompt) so the lead can be re-matched at swap-in.  Returns the
+        modeled bytes moved, or None when the swap is not possible (the
+        caller falls back to recompute-eviction)."""
+        p = self.plan(slot)
+        if p is None:
+            return None
+        lead, n_swap, nbytes = p
+        a = self.engine.allocator
+        bs = a.block_size
+        if lead and (tokens is None or len(tokens) < lead * bs):
+            return None                    # cannot re-match the lead later
+        # the +1 sentinel only defeats match_prefix's len-1 cap; matching
+        # compares full-block contents, never the trailing token
+        probe = (tuple(int(t) for t in tokens[:lead * bs]) + (0,)
+                 if lead else ())
+        swap_bids = [int(a.table[slot, j]) for j in range(lead, lead + n_swap)]
+        payload = None
+        if n_swap:
+            plan_arr = np.full(a.max_blocks_per_slot, -1, np.int32)
+            plan_arr[:n_swap] = swap_bids
+            payload, self.engine.cache = _call_donated(
+                self._gather, self.engine.cache, jnp.asarray(plan_arr))
+            # D2H, then trim the fixed-plan padding: the host keeps only
+            # the n_swap real blocks (the copy detaches the view so the
+            # padded gather buffer is actually freed)
+            payload = jax.tree.map(
+                lambda x: np.asarray(x)[:, :n_swap].copy(), payload)
+        freed = a.release(slot)
+        assert sorted(int(b) for b in freed) == sorted(swap_bids), \
+            "swap-out must free exactly the victim's unshared blocks"
+        self.engine._tables_dirty = True
+        self.engine._sync_tables()
+        self._streams[slot] = SwappedStream(
+            slot=slot, frontier=int(frontier), n_blocks=lead + n_swap,
+            shared_lead=lead, n_swap=n_swap, nbytes=nbytes, probe=probe,
+            payload=payload)
+        self.swap_out_bytes += nbytes
+        return nbytes
+
+    def swap_in(self, slot: int) -> tuple[int, int] | None:
+        """Restore ``slot`` from the host store: re-adopt the shared
+        lead from the prefix index (ref++), allocate fresh blocks for
+        the host payload and scatter it back (one donated dispatch).
+        Returns ``(frontier, nbytes)`` — the caller restores the cloud
+        frontier and charges the H2D transfer — or None when the shared
+        lead has expired from the index (the sibling died): the stream's
+        host payload is dropped and it must recompute from scratch."""
+        st = self._streams.pop(slot)
+        a = self.engine.allocator
+        if st.shared_lead:
+            m = a.match_prefix(list(st.probe))
+            if len(m) < st.shared_lead:
+                self.expired_shares += 1
+                return None
+            a.adopt_prefix(slot, m[:st.shared_lead])
+            self.engine._tables_dirty = True
+        if st.n_swap:
+            if not a.extend(slot, st.n_blocks * a.block_size):
+                raise BlockPoolExhausted(
+                    f"swap-in of slot {slot} needs {st.n_swap} blocks; "
+                    f"pool has {a.free_blocks} free — the scheduler must "
+                    f"gate swap-ins on blocks_needed()")
+            new_bids = [int(a.table[slot, j])
+                        for j in range(st.shared_lead, st.n_blocks)]
+            W = a.max_blocks_per_slot
+            plan_arr = np.full(W, -1, np.int32)
+            plan_arr[:st.n_swap] = new_bids
+            # re-pad the trimmed payload to the fixed (max_bps,) plan
+            # (one jit specialization); pad rows route out of bounds and
+            # never land
+            pad = jax.tree.map(
+                lambda x: jnp.asarray(np.pad(
+                    x, [(0, 0), (0, W - st.n_swap)] +
+                    [(0, 0)] * (x.ndim - 2))), st.payload)
+            self.engine.cache = _call_donated(
+                self._scatter, self.engine.cache, jnp.asarray(plan_arr),
+                pad)
+            self.engine._tables_dirty = True
+        self.engine._sync_tables()
+        self.swap_in_bytes += st.nbytes
+        return st.frontier, st.nbytes
+
+    def drop(self, slot: int) -> None:
+        """Discard a swapped stream's host payload (its session ended
+        without needing the cache again, or it degraded to recompute)."""
+        self._streams.pop(slot, None)

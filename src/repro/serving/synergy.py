@@ -33,9 +33,10 @@ class CloudClient:
     """One device stream's view of the cloud runtime."""
 
     def __init__(self, scheduler: VerificationAwareScheduler,
-                 sampling: str = "greedy"):
+                 sampling: str = "greedy", slo=None):
         self.sched = scheduler
         self.sampling = sampling
+        self.slo = slo              # StreamSLO for slo-aware preemption
         self.slot = None
         self.last_fed_tokens = 0
         self.total_fed_tokens = 0   # generation-phase feeds only
@@ -48,7 +49,7 @@ class CloudClient:
         ``on_event``)."""
         rid = self.sched.next_req_id()
         self.sched.submit_prefill(PrefillRequest(
-            rid, np.asarray(prompt), arrival_ms=arrival_ms))
+            rid, np.asarray(prompt), arrival_ms=arrival_ms, slo=self.slo))
         # prompt prefill tracked separately from generation-phase feeds
         self.prefill_tokens = len(prompt)
         return rid
@@ -160,7 +161,9 @@ def run_synera(device: DeviceRuntime, engine: CloudEngine,
                chunk: int = 32,
                concurrency: int | None = 1,
                arrivals: list[float] | None = None,
-               latency: CloudLatencyModel | None = None) -> RunResult:
+               latency: CloudLatencyModel | None = None,
+               preempt_policy: str | None = None,
+               slos: list | None = None) -> RunResult:
     """Serve ``prompts`` through the Synera pipeline.
 
     ``concurrency=1`` (default) runs streams strictly one after another
@@ -168,13 +171,16 @@ def run_synera(device: DeviceRuntime, engine: CloudEngine,
     for unbounded) lets the SyneraServer event loop interleave up to N
     device streams over the shared cloud engine, so verify iterations
     pack chunks from multiple slots.  ``arrivals`` optionally gives each
-    stream an absolute arrival offset (ms) on the shared clock.
+    stream an absolute arrival offset (ms) on the shared clock;
+    ``preempt_policy`` / ``slos`` select the eviction victim policy and
+    attach per-stream latency budgets (serving/swap.py).
     """
     from repro.serving.server import SyneraServer
     server = SyneraServer(device, engine, chunk=chunk, sampling=sampling,
-                          latency=latency)
+                          latency=latency, preempt_policy=preempt_policy)
     metrics = server.serve(prompts, max_new, concurrency=concurrency,
-                           arrivals=arrivals, profile_mode=profile_mode)
+                           arrivals=arrivals, profile_mode=profile_mode,
+                           slos=slos)
     res = RunResult()
     for m in metrics:
         res.outputs.append(m.tokens)
@@ -239,7 +245,8 @@ def run_cloud_centric(engine: CloudEngine, prompts, max_new, *,
 def run_hybrid(device: DeviceRuntime, engine: CloudEngine, prompts, max_new,
                *, cost_model=None, chunk: int = 32,
                concurrency: int | None = 1,
-               arrivals: list[float] | None = None) -> RunResult:
+               arrivals: list[float] | None = None,
+               preempt_policy: str | None = None) -> RunResult:
     """Hybrid [9]: SLM-LLM token-level offloading by *confidence only*
     (no importance, no PI, no early exit)."""
     from repro.core.offload import OffloadPolicy
@@ -251,7 +258,7 @@ def run_hybrid(device: DeviceRuntime, engine: CloudEngine, prompts, max_new,
         wire_vocab=device.wire_vocab)
     return run_synera(dev, engine, prompts, max_new, cost_model=cost_model,
                       chunk=chunk, concurrency=concurrency,
-                      arrivals=arrivals)
+                      arrivals=arrivals, preempt_policy=preempt_policy)
 
 
 def run_edgefm(device: DeviceRuntime, engine: CloudEngine, prompts, max_new,

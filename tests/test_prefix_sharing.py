@@ -161,6 +161,61 @@ def test_allocator_cow_fork_and_divergence_unregister():
     assert a.match_prefix(toks) == []
 
 
+def test_canonical_chain_registration_survives_primary_death():
+    """Regression (ROADMAP: canonical-chain registration): a block whose
+    chain hash is already indexed (a content duplicate — e.g. the last
+    full block of an identical prompt, which sits past match_prefix's
+    len-1 cap and is therefore re-allocated) must register as a shadow
+    under the *canonical* chain hash.  When the primary dies with its
+    owner, the shadow is promoted — without it, a later stream misses a
+    share that content-wise still exists in the pool."""
+    a = BlockAllocator(12, 4, 4, 8, share_prefix=True)
+    toks = list(range(1, 9))                     # [X][Y]: 2 full blocks
+    assert a.extend(0, 8)
+    a.register_prefix(0, toks)
+    a.prepare_writes(0, [0, 1])                  # feed realizes the content
+    # an identical prompt adopts [X] only (len-1 cap) and allocates a
+    # content duplicate of [Y] behind the shared parent
+    m = a.match_prefix(toks)
+    assert len(m) == 1
+    a.adopt_prefix(1, m)
+    assert a.extend(1, 8)
+    a.register_prefix(1, toks)
+    a.prepare_writes(1, [1])
+    dup = int(a.table[1, 1])
+    # the original owner dies: its [Y] block frees and leaves the index
+    a.release(0)
+    # a longer prompt with the same 2-block prefix must match BOTH
+    # blocks — the promoted duplicate carries the share
+    m2 = a.match_prefix(toks + list(range(20, 26)))
+    assert len(m2) == 2 and m2[1] == dup, (m2, dup)
+    assert a.shadow_promotions == 1
+    # divergent write into the promoted block unpublishes it again
+    a.prepare_writes(1, [1])
+    assert a.match_prefix(toks + [40]) == [m2[0]]
+
+
+def test_canonical_chain_shadow_dies_with_its_block():
+    """A shadow that frees before its primary must simply leave the
+    shadow list (no promotion, no stale index entry)."""
+    a = BlockAllocator(12, 4, 4, 8, share_prefix=True)
+    toks = list(range(1, 9))
+    assert a.extend(0, 8)
+    a.register_prefix(0, toks)
+    a.prepare_writes(0, [0, 1])
+    a.adopt_prefix(1, a.match_prefix(toks))
+    assert a.extend(1, 8)
+    a.register_prefix(1, toks)
+    a.prepare_writes(1, [1])
+    a.release(1)                                 # shadow owner dies first
+    assert a.shadow_promotions == 0
+    # primary intact: the full prefix still matches through slot 0
+    assert len(a.match_prefix(toks + [40, 41])) == 2
+    a.release(0)
+    assert a.match_prefix(toks + [40, 41]) == []
+    assert not a._index and not a._shadow and not a._rindex
+
+
 def test_allocator_cow_fork_requires_free_block():
     a = BlockAllocator(3, 4, 4, 8, share_prefix=True)
     toks = list(range(1, 13))
