@@ -12,6 +12,19 @@ through the SyneraServer event loop so cloud verify iterations pack
 chunks from multiple slots; ``--concurrency 0`` means unbounded.
 ``--arrival-rate R`` draws Poisson request arrivals at R req/s on the
 shared simulated clock (default: all streams arrive at admission).
+
+``--http`` instead brings up the OpenAI-compatible streaming gateway
+(serving/gateway/, docs/serving_api.md) over the same engine + device
+pair and serves real sockets until interrupted:
+
+  PYTHONPATH=src:. python -m repro.launch.serve --http --port 8711 \
+      --budget 0.2 --max-active 4 --queue-cap 8
+
+The gateway runs on a wall clock (``RealClock``): requests are served
+as fast as the host allows while the modeled schedule accumulates
+shadow time for the modeled-vs-real cross-check on /metrics;
+``--wall-pace`` instead sleeps through modeled costs so wall-clock
+latencies track the modeled schedule.
 """
 from __future__ import annotations
 
@@ -93,9 +106,30 @@ def main():
                          "unmodified prompts, so treat them as a smoke "
                          "signal only)")
     ap.add_argument("--json", action="store_true")
+    ap.add_argument("--http", action="store_true",
+                    help="serve the OpenAI-compatible streaming HTTP "
+                         "gateway instead of a fixed batch (synera mode "
+                         "only; runs until interrupted)")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8711,
+                    help="gateway port (0 = ephemeral)")
+    ap.add_argument("--max-active", type=int, default=4,
+                    help="gateway: concurrent streams in the serving "
+                         "loop; beyond this, accepted requests queue")
+    ap.add_argument("--queue-cap", type=int, default=8,
+                    help="gateway: accepted-but-waiting requests beyond "
+                         "--max-active before new ones get 429 + "
+                         "Retry-After")
+    ap.add_argument("--wall-pace", action="store_true",
+                    help="gateway: sleep through modeled costs so "
+                         "wall-clock latencies track the modeled "
+                         "schedule (default: serve at host speed, "
+                         "modeled time as a shadow cross-check)")
     args = ap.parse_args()
     if args.concurrency < 0:
         ap.error("--concurrency must be >= 0 (0 = unbounded)")
+    if args.http and args.mode != "synera":
+        ap.error("--http serves the synera pipeline (--mode synera)")
 
     from benchmarks import paper_claims as PC
     from benchmarks.prepare import get_pair
@@ -156,6 +190,21 @@ def main():
                              seed=args.seed,
                              policy=OffloadPolicy(mode="none"))
 
+    if args.http:
+        from repro.serving.gateway import Gateway, GatewayConfig
+        from repro.serving.link import RealClock
+        from repro.serving.server import SyneraServer
+        server = SyneraServer(dev, eng,
+                              clock=RealClock(pace=args.wall_pace),
+                              preempt_policy=args.preempt_policy,
+                              clamp_arrivals=not args.wall_pace)
+        Gateway(server, GatewayConfig(
+            host=args.host, port=args.port,
+            max_new_default=args.max_new,
+            max_active=args.max_active,
+            queue_cap=args.queue_cap)).run_forever()
+        return
+
     run = {
         "synera": lambda: SY.run_synera(dev, eng, prompts, args.max_new,
                                         concurrency=concurrency,
@@ -187,7 +236,13 @@ def main():
             concurrency=args.concurrency,
             verify_occupancy=sched["mean_verify_occupancy"],
             packed_tokens=sched["mean_packed_tokens"],
-            iterations=sched["iterations"])
+            iterations=sched["iterations"],
+            # same ServerStats fields the gateway's /metrics exposes
+            completed_streams=sched["completed_streams"],
+            ttft_ms_p50=sched["ttft_ms_p50"],
+            ttft_ms_p95=sched["ttft_ms_p95"],
+            e2e_ms_p50=sched["e2e_ms_p50"],
+            e2e_ms_p95=sched["e2e_ms_p95"])
         if sched.get("cache_impl") == "paged":
             summary.update(
                 cache_impl="paged",

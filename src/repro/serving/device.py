@@ -282,7 +282,8 @@ class DeviceRuntime:
                                    fed_tokens=cloud.last_fed_tokens)
 
     def generate_steps(self, prompt: list[int], max_new: int, *,
-                       use_cloud: bool = True, profile_mode: bool = False):
+                       use_cloud: bool = True, profile_mode: bool = False,
+                       emit=None):
         """Device generation as a resumable coroutine.
 
         Yields a :class:`CloudCall` whenever the stream needs the cloud;
@@ -290,6 +291,15 @@ class DeviceRuntime:
         notifications and with a :class:`CloudReply` carrying the
         ``VerifyResult`` for verify calls.  Returns (via StopIteration)
         the stream's :class:`DeviceMetrics`.
+
+        ``emit(tokens, t_ms)`` is the incremental-output hook (token
+        streaming): it fires each time accepted output tokens are
+        appended to the stream — a locally kept draft chunk or the
+        verified tokens of a cloud round trip — with the new tokens
+        (clipped to ``max_new``) and the stream-relative device time.
+        ``seq`` only ever grows (rejected drafts never enter it), so
+        emitted tokens are final: their concatenation is byte-identical
+        to the returned ``DeviceMetrics.tokens``.
 
         All device-side state (KV cache, accepted stream, timeline) lives
         in this generator's frame, so one ``DeviceRuntime`` (weights +
@@ -328,6 +338,16 @@ class DeviceRuntime:
 
         seq = list(prompt)     # invariant: seq[:-1] fed, seq[-1] not fed
         pi_chunk = None
+        n_emitted = 0
+
+        def _flush_emit():
+            nonlocal n_emitted
+            if emit is None:
+                return
+            vis = min(len(seq) - T, max_new)
+            if vis > n_emitted:
+                emit(seq[T + n_emitted:T + vis], m.timeline.t_ms)
+                n_emitted = vis
 
         while len(seq) - T < max_new:
             if pi_chunk is not None:
@@ -352,6 +372,7 @@ class DeviceRuntime:
             if not do_offload:
                 seq.extend(tokens)
                 m.n_local_tokens += len(tokens)
+                _flush_emit()
                 continue
 
             # ---- offload: build + send the verification request --------
@@ -421,6 +442,7 @@ class DeviceRuntime:
             seq.extend(verified)
             m.n_cloud_tokens += len(verified)
             m.n_accepted_tokens += n_acc
+            _flush_emit()
 
             if n_acc >= self.gamma and not dgamma_fed:
                 # full acceptance: d_gamma entered `seq` but was never fed
@@ -446,6 +468,7 @@ class DeviceRuntime:
             # causally masked until overwritten — nothing to roll back.
 
         m.tokens = seq[T:T + max_new]
+        _flush_emit()
         return m
 
     # ------------------------------------------------------------------

@@ -1,0 +1,90 @@
+"""Minimal asyncio HTTP/1.1 substrate for the gateway.
+
+The container has no third-party web stack (no aiohttp/FastAPI/uvicorn),
+so the gateway speaks HTTP directly over asyncio streams.  Scope is
+deliberately tiny — exactly what the gateway and its bench client need:
+
+* request parsing (request line, headers, Content-Length body; bodies
+  are capped, chunked request bodies are not accepted),
+* fixed responses and SSE streaming responses,
+* ``Connection: close`` semantics (one exchange per connection — the
+  load generator opens a connection per request, which also gives the
+  disconnect-detection path constant exercise).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from urllib.parse import parse_qs, urlsplit
+
+MAX_BODY_BYTES = 1 << 20
+MAX_HEADER_LINES = 64
+
+REASONS = {200: "OK", 400: "Bad Request", 404: "Not Found",
+           405: "Method Not Allowed", 429: "Too Many Requests",
+           500: "Internal Server Error"}
+
+
+@dataclass
+class HTTPRequest:
+    method: str
+    path: str                     # path only, query stripped
+    query: dict = field(default_factory=dict)   # first value per key
+    headers: dict = field(default_factory=dict)  # lower-cased names
+    body: bytes = b""
+
+
+class BadRequest(ValueError):
+    pass
+
+
+async def read_request(reader) -> HTTPRequest | None:
+    """Parse one HTTP/1.1 request; None on immediate EOF (client went
+    away between connect and send).  Raises BadRequest on malformed or
+    oversized input."""
+    line = await reader.readline()
+    if not line:
+        return None
+    try:
+        method, target, _version = line.decode("ascii").split()
+    except ValueError:
+        raise BadRequest(f"malformed request line: {line[:80]!r}")
+    headers: dict[str, str] = {}
+    for _ in range(MAX_HEADER_LINES):
+        h = await reader.readline()
+        if h in (b"\r\n", b"\n", b""):
+            break
+        name, _, val = h.decode("latin1").partition(":")
+        headers[name.strip().lower()] = val.strip()
+    else:
+        raise BadRequest("too many header lines")
+    if "chunked" in headers.get("transfer-encoding", "").lower():
+        raise BadRequest("chunked request bodies are not supported")
+    try:
+        clen = int(headers.get("content-length", "0"))
+    except ValueError:
+        raise BadRequest("bad Content-Length")
+    if not 0 <= clen <= MAX_BODY_BYTES:
+        raise BadRequest(f"body too large ({clen} bytes)")
+    body = await reader.readexactly(clen) if clen else b""
+    parts = urlsplit(target)
+    query = {k: v[0] for k, v in parse_qs(parts.query).items()}
+    return HTTPRequest(method=method.upper(), path=parts.path, query=query,
+                       headers=headers, body=body)
+
+
+def response(status: int, body: bytes, *,
+             content_type: str = "application/json",
+             extra_headers: dict | None = None) -> bytes:
+    head = [f"HTTP/1.1 {status} {REASONS.get(status, 'Unknown')}",
+            f"Content-Type: {content_type}",
+            f"Content-Length: {len(body)}",
+            "Connection: close"]
+    for k, v in (extra_headers or {}).items():
+        head.append(f"{k}: {v}")
+    return ("\r\n".join(head) + "\r\n\r\n").encode() + body
+
+
+SSE_HEADER = (b"HTTP/1.1 200 OK\r\n"
+              b"Content-Type: text/event-stream\r\n"
+              b"Cache-Control: no-cache\r\n"
+              b"Connection: close\r\n\r\n")

@@ -12,6 +12,7 @@ simulated.  See DESIGN.md §2.
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
 
 
@@ -35,6 +36,54 @@ class SimClock:
     def advance_to(self, t_ms: float) -> float:
         """Fast-forward (never rewind) to an absolute time."""
         self.now_ms = max(self.now_ms, t_ms)
+        return self.now_ms
+
+
+@dataclass
+class RealClock:
+    """Wall-clock drop-in for :class:`SimClock` (serving/gateway).
+
+    ``now_ms`` reads the monotonic clock, so arrival gating, queueing
+    delays and completion times measured against this clock are *real*
+    — the axis a network client experiences.  The modeled costs the
+    scheduler charges via :meth:`advance` / :meth:`advance_to` do not
+    move real time; instead they accumulate into ``modeled_ms`` with
+    SimClock semantics (advance adds, advance_to fast-forwards), a
+    shadow of where the simulated clock would stand on the same
+    schedule.  Comparing ``now_ms`` against ``modeled_ms`` at any point
+    is the modeled-vs-real cross-check: the gap is work the latency
+    model does not account for (real compute, GC, socket overhead).
+
+    ``pace=True`` additionally *sleeps* through modeled costs and idle
+    fast-forwards, so cloud events land at roughly their modeled wall
+    times (real >= modeled; the excess is host compute).  Long idle
+    waits sleep in bounded slices and may return early — callers
+    (scheduler/server loops) re-invoke until the clock catches up, so
+    cancellation stays responsive.
+    """
+    pace: bool = False
+    max_sleep_ms: float = 50.0     # per-call sleep slice (pace mode)
+    modeled_ms: float = 0.0        # shadow SimClock on the same schedule
+    _t0: float = field(default_factory=time.monotonic)
+
+    @property
+    def now_ms(self) -> float:
+        return (time.monotonic() - self._t0) * 1e3
+
+    def advance(self, dt_ms: float) -> float:
+        self.modeled_ms += dt_ms
+        if self.pace and dt_ms > 0:
+            time.sleep(dt_ms / 1e3)
+        return self.now_ms
+
+    def advance_to(self, t_ms: float) -> float:
+        """Fast-forward the modeled shadow; real time cannot jump.  In
+        pace mode, sleep toward ``t_ms`` (one bounded slice)."""
+        self.modeled_ms = max(self.modeled_ms, t_ms)
+        if self.pace:
+            wait = min(t_ms - self.now_ms, self.max_sleep_ms)
+            if wait > 0:
+                time.sleep(wait / 1e3)
         return self.now_ms
 
 

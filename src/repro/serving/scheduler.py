@@ -227,6 +227,23 @@ class VerificationAwareScheduler:
     def has_work(self) -> bool:
         return bool(self.prefill_q or self.verify_q or self.active_verify)
 
+    def cancel_requests(self, req_ids: set) -> None:
+        """Drop every queued or in-flight request in ``req_ids`` (client
+        cancellation / disconnect).  Request state is simply discarded —
+        the caller is responsible for releasing the slot afterwards
+        (``release_slot``), which frees blocks, drops swap state and
+        decrefs shared prefixes.  Purging *before* the release matters:
+        a freed slot row may be re-assigned to a new stream, and a stale
+        request must never execute against the new owner's cache."""
+        if not req_ids:
+            return
+        self.prefill_q = deque(r for r in self.prefill_q
+                               if r.req_id not in req_ids)
+        self.verify_q = deque(r for r in self.verify_q
+                              if r.req_id not in req_ids)
+        self.active_verify = [r for r in self.active_verify
+                              if r.req_id not in req_ids]
+
     # ------------------------------------------------------------------
     def run_iteration(self) -> list[SchedulerEvent]:
         """One scheduling iteration (one trip through Algorithm 1's loop).

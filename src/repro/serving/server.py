@@ -42,6 +42,8 @@ from __future__ import annotations
 from collections import deque
 from dataclasses import asdict, dataclass, field
 
+import numpy as np
+
 from repro.serving.device import CloudReply, DeviceRuntime
 from repro.serving.engine import CloudEngine
 from repro.serving.link import CloudLatencyModel, SimClock
@@ -98,6 +100,22 @@ class ServerStats:
     shared_blocks: int = 0             # blocks currently mapped by >1 slot
     dedupe_hit_blocks: int = 0         # cumulative blocks adopted, not alloc'd
     cow_copies: int = 0                # cumulative copy-on-write forks
+    # -- request lifecycle (gateway front door, serving/gateway/) --
+    clock: str = "sim"                 # "sim" (SimClock) | "wall" (RealClock)
+    modeled_ms: float = 0.0            # shadow modeled time (== sim_ms on sim)
+    queue_depth: int = 0               # admitted requests not yet in a session
+    rejected_requests: int = 0         # 429s issued at the queue cap
+    completed_streams: int = 0
+    cancelled_streams: int = 0         # cancel()/client-disconnect teardowns
+    # per-stream latency aggregates on the stream time axis (modeled ms
+    # under SimClock; under the gateway's RealClock the same fields are
+    # the server-side half of the modeled-vs-real cross-check)
+    ttft_ms_mean: float = 0.0
+    ttft_ms_p50: float = 0.0
+    ttft_ms_p95: float = 0.0
+    e2e_ms_mean: float = 0.0
+    e2e_ms_p50: float = 0.0
+    e2e_ms_p95: float = 0.0
 
     def as_dict(self) -> dict:
         return asdict(self)
@@ -117,6 +135,10 @@ class DeviceSession:
     prefill_rid: int | None = None  # in-flight prompt prefill request id
     slots_used: list = field(default_factory=list)
     slo: object = None             # StreamSLO budgets (slo-aware preemption)
+    cancelled: bool = False        # torn down via SyneraServer.cancel
+    ttft_ms: float | None = None   # stream-relative time of first emit
+    e2e_ms: float | None = None    # stream-relative completion time
+    n_emitted: int = 0             # output tokens emitted so far
 
     @property
     def done(self) -> bool:
@@ -130,7 +152,8 @@ class SyneraServer:
                  chunk: int = 32, sampling: str = "greedy",
                  latency: CloudLatencyModel | None = None,
                  clock: SimClock | None = None,
-                 preempt_policy: str | None = None):
+                 preempt_policy: str | None = None,
+                 clamp_arrivals: bool = False):
         self.device = device
         self.engine = engine
         self.sampling = sampling
@@ -142,30 +165,60 @@ class SyneraServer:
         self._by_req: dict[int, tuple[DeviceSession, str]] = {}
         self._fresh: deque[DeviceSession] = deque()  # opened, not yet run
         self._done_count = 0
+        # -- gateway front-door state (serving/gateway/) ----------------
+        # clamp_arrivals maps every cloud call's arrival to "now" on the
+        # shared clock instead of start_ms + modeled device time: the
+        # unpaced wall-clock mode, where requests are served as fast as
+        # the host allows and the modeled device timeline is kept only
+        # for the modeled-vs-real cross-check.
+        self.clamp_arrivals = clamp_arrivals
+        self.ext_queue_depth = 0       # gateway-held requests not yet opened
+        self.rejected_requests = 0     # gateway 429s at the queue cap
 
     # ------------------------------------------------------------------
     def open_session(self, prompt, max_new: int, *,
                      arrival_ms: float | None = None,
                      profile_mode: bool = False,
-                     slo: object = None) -> DeviceSession:
+                     slo: object = None,
+                     emit=None) -> DeviceSession:
         """Register a new device stream.  ``arrival_ms`` anchors the
         stream's device timeline on the shared clock; default is "now"
         (the stream starts when it is admitted).  ``slo`` optionally
         carries the stream's latency budgets (``swap.StreamSLO``) for
-        the slo-aware preemption policy."""
+        the slo-aware preemption policy.  ``emit(tokens, t_ms)`` is the
+        per-token streaming hook (see ``DeviceRuntime.generate_steps``);
+        the server always interposes to record the session's TTFT and
+        emitted-token count, then chains to the caller's hook."""
         start = self.clock.now_ms if arrival_ms is None else arrival_ms
-        gen = self.device.generate_steps(prompt, max_new, use_cloud=True,
-                                         profile_mode=profile_mode)
         client = CloudClient(self.sched, sampling=self.sampling, slo=slo)
-        s = DeviceSession(sid=len(self.sessions), gen=gen, client=client,
+        s = DeviceSession(sid=len(self.sessions), gen=None, client=client,
                           start_ms=start, slo=slo)
+
+        def _emit(tokens, t_ms, _s=s, _user=emit):
+            if _s.ttft_ms is None:
+                _s.ttft_ms = t_ms
+            _s.n_emitted += len(tokens)
+            if _user is not None:
+                _user(tokens, t_ms)
+
+        s.gen = self.device.generate_steps(prompt, max_new, use_cloud=True,
+                                           profile_mode=profile_mode,
+                                           emit=_emit)
         self.sessions.append(s)
         self._fresh.append(s)
         return s
 
     # ------------------------------------------------------------------
+    def _arrival(self, s: DeviceSession, call) -> float:
+        """Absolute arrival of a cloud call on the shared clock:
+        ``start_ms + modeled device time + uplink``, or "now" in the
+        unpaced wall-clock mode (clamp_arrivals)."""
+        if self.clamp_arrivals:
+            return self.clock.now_ms
+        return s.start_ms + call.arrival_ms
+
     def _submit_verify(self, s: DeviceSession, call) -> None:
-        arr = s.start_ms + call.arrival_ms
+        arr = self._arrival(s, call)
         rid = s.client.verify_async(call.seq, call.draft, call.dists,
                                     arrival_ms=arr)
         self._by_req[rid] = (s, "verify")
@@ -179,6 +232,7 @@ class SyneraServer:
                 call = s.gen.send(reply)
             except StopIteration as e:
                 s.metrics = e.value
+                s.e2e_ms = e.value.timeline.t_ms
                 s.state = DONE
                 self._done_count += 1
                 had_slot = s.client.slot is not None
@@ -195,7 +249,7 @@ class SyneraServer:
             reply = None
             if call.kind == "prefill":
                 rid = s.client.prefill_async(
-                    call.prompt, arrival_ms=s.start_ms + call.arrival_ms)
+                    call.prompt, arrival_ms=self._arrival(s, call))
                 s.prefill_rid = rid
                 self._by_req[rid] = (s, "prefill")
                 continue  # fire-and-forget: the device keeps drafting
@@ -206,6 +260,44 @@ class SyneraServer:
             else:
                 self._submit_verify(s, call)
             return
+
+    # ------------------------------------------------------------------
+    def cancel(self, session: DeviceSession | int) -> bool:
+        """Tear down a mid-flight stream (client disconnect / explicit
+        cancellation).  Clean teardown means *nothing leaks*:
+
+        * the generation coroutine is closed (its device cache and
+          timeline die with the frame),
+        * every queued or in-flight scheduler request the session owns
+          is purged *before* its slot is released (a re-assigned slot
+          row must never execute a dead stream's work),
+        * the slot release returns the row, decrefs/frees its blocks
+          (shared prefix blocks survive for their siblings), and drops
+          any host-swap state (``release_slot`` -> ``swap.drop``).
+
+        Safe in any state: fresh (never ran), wait_slot (queued prefill
+        cancelled), wait_cloud (verify purged), swapped-out, or holding
+        shared/CoW blocks.  Returns False if the session was already
+        done.  ``DeviceSession.metrics`` stays None for cancelled
+        streams (the coroutine frame owns the partial metrics)."""
+        s = self.sessions[session] if isinstance(session, int) else session
+        if s.done:
+            return False
+        s.gen.close()
+        s.state = DONE
+        s.cancelled = True
+        s.pending_call = None
+        self._done_count += 1
+        try:
+            self._fresh.remove(s)
+        except ValueError:
+            pass
+        rids = {rid for rid, (sess, _) in self._by_req.items() if sess is s}
+        for rid in rids:
+            self._by_req.pop(rid)
+        self.sched.cancel_requests(rids)
+        s.client.release()
+        return True
 
     # ------------------------------------------------------------------
     def step(self) -> bool:
@@ -306,7 +398,24 @@ class SyneraServer:
                         for r in sched.prefill_q
                         if r.req_id in self._by_req}
         waiting = len(waiting_ids)
+        ttfts = [s.ttft_ms for s in self.sessions if s.ttft_ms is not None]
+        e2es = [s.e2e_ms for s in self.sessions if s.e2e_ms is not None]
+
+        def pct(xs, q):
+            return float(np.percentile(xs, q)) if xs else 0.0
+
         return ServerStats(
+            clock=("wall" if hasattr(self.clock, "modeled_ms") else "sim"),
+            modeled_ms=getattr(self.clock, "modeled_ms", self.clock.now_ms),
+            queue_depth=self.ext_queue_depth + len(self._fresh) + waiting,
+            rejected_requests=self.rejected_requests,
+            completed_streams=sum(1 for s in self.sessions
+                                  if s.done and not s.cancelled),
+            cancelled_streams=sum(1 for s in self.sessions if s.cancelled),
+            ttft_ms_mean=float(np.mean(ttfts)) if ttfts else 0.0,
+            ttft_ms_p50=pct(ttfts, 50), ttft_ms_p95=pct(ttfts, 95),
+            e2e_ms_mean=float(np.mean(e2es)) if e2es else 0.0,
+            e2e_ms_p50=pct(e2es, 50), e2e_ms_p95=pct(e2es, 95),
             iterations=sched.iterations,
             prefill_iterations=sched.prefill_iterations,
             verify_iterations=sched.verify_iterations,

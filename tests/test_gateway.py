@@ -1,0 +1,438 @@
+"""Gateway tests: OpenAI wire framing, RealClock semantics, streaming
+identity over a real socket, cancellation/disconnect resource release,
+and 429 backpressure at the queue cap.
+
+The HTTP tests run a real ``Gateway`` (engine thread + asyncio thread)
+on an ephemeral port and talk to it with plain blocking sockets — the
+container has no HTTP client library, and raw sockets double as the
+strictest check of the SSE byte framing.
+"""
+import json
+import socket
+import threading
+import time
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs.synera_pair import tiny_pair
+from repro.core.offload import OffloadPolicy
+from repro.models import model as M
+from repro.serving.device import DeviceRuntime
+from repro.serving.engine import CloudEngine
+from repro.serving.gateway import Gateway, GatewayConfig
+from repro.serving.gateway import protocol as P
+from repro.serving.link import RealClock
+from repro.serving.server import SyneraServer
+from repro.serving import synergy as SY
+
+
+@pytest.fixture(scope="module")
+def pair():
+    slm_cfg, llm_cfg = tiny_pair(vocab=64)
+    slm_p = M.init_params(slm_cfg, jax.random.PRNGKey(0))
+    llm_p = M.init_params(llm_cfg, jax.random.PRNGKey(1))
+    return slm_cfg, slm_p, llm_cfg, llm_p
+
+
+@pytest.fixture(scope="module")
+def dev(pair):
+    slm_cfg, slm_p, _, _ = pair
+    return DeviceRuntime(slm_cfg, slm_p, s_max=256, gamma=4, seed=0,
+                         policy=OffloadPolicy(mode="all"),
+                         use_early_exit=False, use_pi=False)
+
+
+@pytest.fixture(scope="module")
+def eng4(pair):
+    _, _, llm_cfg, llm_p = pair
+    return CloudEngine(llm_cfg, llm_p, max_slots=4, s_max=256)
+
+
+@pytest.fixture(scope="module")
+def eng_paged(pair):
+    """Paged engine with prefix sharing + the host swap tier enabled —
+    the cancel/disconnect tests must show teardown leaks nothing even
+    with shared and swappable blocks in play."""
+    _, _, llm_cfg, llm_p = pair
+    return CloudEngine(llm_cfg, llm_p, max_slots=2, s_max=256,
+                       cache_impl="paged", block_size=16,
+                       share_prefix=True, swap=True)
+
+
+def _prompts(n, length=8):
+    rng = np.random.default_rng(5)
+    return [[int(t) for t in rng.integers(1, 60, size=length)]
+            for _ in range(n)]
+
+
+# ---------------------------------------------------------------------
+# plain-socket HTTP client helpers
+# ---------------------------------------------------------------------
+
+def _parse_response(data: bytes):
+    head, _, body = data.partition(b"\r\n\r\n")
+    lines = head.decode("latin1").split("\r\n")
+    status = int(lines[0].split()[1])
+    headers = {}
+    for ln in lines[1:]:
+        k, _, v = ln.partition(":")
+        headers[k.strip().lower()] = v.strip()
+    return status, headers, body
+
+
+def _raw_request(port, method, path, obj=None, timeout=180):
+    payload = json.dumps(obj).encode() if obj is not None else b""
+    head = [f"{method} {path} HTTP/1.1", "Host: localhost",
+            "Connection: close"]
+    if payload:
+        head += ["Content-Type: application/json",
+                 f"Content-Length: {len(payload)}"]
+    sock = socket.create_connection(("127.0.0.1", port), timeout=timeout)
+    try:
+        sock.sendall(("\r\n".join(head) + "\r\n\r\n").encode() + payload)
+        data = b""
+        while True:
+            chunk = sock.recv(65536)
+            if not chunk:
+                break
+            data += chunk
+    finally:
+        sock.close()
+    return _parse_response(data)
+
+
+def _sse_frames(body: bytes):
+    """Split an SSE body into its ``data:`` payloads (bytes)."""
+    out = []
+    for frame in body.split(b"\n\n"):
+        if frame.startswith(b"data: "):
+            out.append(frame[len(b"data: "):])
+    return out
+
+
+def _chat_body(prompt, max_new, stream=True):
+    return {"model": "synera-tiny", "stream": stream,
+            "max_tokens": max_new,
+            "messages": [{"role": "user",
+                          "content": " ".join(str(t) for t in prompt)}]}
+
+
+def _start_gateway(dev, eng, **cfg_kw):
+    server = SyneraServer(dev, eng, clock=RealClock(),
+                          clamp_arrivals=True)
+    gw = Gateway(server, GatewayConfig(port=0, **cfg_kw)).start()
+    return gw, server
+
+
+# ---------------------------------------------------------------------
+# units: clock + wire framing (no sockets, no model)
+# ---------------------------------------------------------------------
+
+def test_realclock_semantics():
+    c = RealClock()                      # unpaced: never sleeps
+    t0 = c.now_ms
+    c.advance(500.0)
+    assert c.modeled_ms == 500.0
+    assert c.now_ms - t0 < 250           # did not sleep 500ms of real time
+    c.advance_to(900.0)
+    assert c.modeled_ms == 900.0
+    c.advance_to(100.0)                  # never moves modeled time backwards
+    assert c.modeled_ms == 900.0
+    assert c.now_ms >= t0                # real time is monotonic
+
+    p = RealClock(pace=True)
+    t0 = p.now_ms
+    p.advance(30.0)
+    assert p.now_ms - t0 >= 25           # paced: slept through modeled cost
+    assert p.modeled_ms == 30.0
+
+
+def test_parse_chat_request_validation():
+    kw = dict(default_model="m", default_max_tokens=8, max_tokens_cap=16)
+    req = P.parse_chat_request(json.dumps({
+        "messages": [{"role": "user", "content": "3 5 7"}],
+        "stream": True, "max_tokens": 99}).encode(), **kw)
+    assert req.prompt == [3, 5, 7]
+    assert req.max_tokens == 16          # clamped to the cap
+    assert req.stream and req.include_usage
+
+    ok = {"messages": [{"role": "user", "content": "3 5"}]}
+    assert P.parse_chat_request(json.dumps(ok).encode(), **kw).max_tokens == 8
+
+    for bad in [b"not json", b"[]",
+                json.dumps({"messages": []}).encode(),
+                json.dumps({"messages": [{"role": "u"}]}).encode(),
+                json.dumps({"messages": [{"content": "hello world"}]}
+                           ).encode(),      # non-integer tokens
+                json.dumps({"messages": [{"content": "7"}]}).encode(),
+                json.dumps({"messages": [{"content": "3 5"}],
+                            "max_tokens": 0}).encode()]:
+        with pytest.raises(P.ProtocolError):
+            P.parse_chat_request(bad, **kw)
+
+    off = dict(ok, stream_options={"include_usage": False})
+    assert not P.parse_chat_request(
+        json.dumps(off).encode(), **kw).include_usage
+
+
+def test_sse_framing_units():
+    ev = P.sse_event(P.chunk_dict("cid", 1, "m", content=P.detok([4, 9])))
+    assert ev.startswith(b"data: ") and ev.endswith(b"\n\n")
+    obj = json.loads(ev[len(b"data: "):])
+    assert obj["object"] == "chat.completion.chunk"
+    assert obj["choices"][0]["delta"]["content"] == "4 9 "
+    assert obj["choices"][0]["finish_reason"] is None
+
+    final = P.chunk_dict("cid", 1, "m", finish_reason="length",
+                         usage=P.usage_dict(3, 5))
+    assert final["choices"][0]["delta"] == {}
+    assert final["usage"]["total_tokens"] == 8
+
+    assert P.parse_tokens(P.detok([1, 22, 63])) == [1, 22, 63]
+
+    text = P.metrics_text({"queue_depth": 2, "swap": True, "clock": "wall"})
+    assert "synera_queue_depth 2" in text
+    assert "synera_swap 1" in text
+    assert "# synera_clock: wall" in text
+
+
+# ---------------------------------------------------------------------
+# streaming identity over a real socket
+# ---------------------------------------------------------------------
+
+def test_stream_identity_over_socket(dev, eng4):
+    """Acceptance: tokens streamed over HTTP are byte-identical to the
+    in-process run_synera outputs — same prompts, same greedy pipeline —
+    with correct chunk ordering, usage accounting and [DONE]."""
+    prompts = _prompts(3)
+    max_new = 12
+    ref = SY.run_synera(dev, eng4, prompts, max_new, concurrency=1)
+
+    gw, server = _start_gateway(dev, eng4, max_active=4, queue_cap=4)
+    try:
+        for i, prompt in enumerate(prompts):
+            status, headers, body = _raw_request(
+                gw.port, "POST", "/v1/chat/completions",
+                _chat_body(prompt, max_new))
+            assert status == 200
+            assert headers["content-type"].startswith("text/event-stream")
+            frames = _sse_frames(body)
+            assert frames[-1] == b"[DONE]"
+            chunks = [json.loads(f) for f in frames[:-1]]
+            # one completion id, ordered roles: role delta, content
+            # deltas, then the finish frame
+            assert len({c["id"] for c in chunks}) == 1
+            assert chunks[0]["choices"][0]["delta"] == {"role": "assistant"}
+            *mid, last = chunks[1:]
+            assert all(c["choices"][0]["finish_reason"] is None
+                       for c in chunks[:-1])
+            text = "".join(c["choices"][0]["delta"]["content"] for c in mid)
+            assert P.parse_tokens(text) == list(ref.outputs[i])
+            assert last["choices"][0]["delta"] == {}
+            assert last["choices"][0]["finish_reason"] == "length"
+            assert last["usage"] == {"prompt_tokens": len(prompt),
+                                     "completion_tokens": max_new,
+                                     "total_tokens": len(prompt) + max_new}
+        st = server.stats()
+        assert st["clock"] == "wall"
+        assert st["completed_streams"] == len(prompts)
+        assert st["cancelled_streams"] == 0
+        assert st["ttft_ms_p50"] > 0 and st["e2e_ms_p95"] > 0
+    finally:
+        gw.close()
+
+
+def test_non_streaming_matches_streaming(dev, eng4):
+    prompt = _prompts(1)[0]
+    ref = SY.run_synera(dev, eng4, [prompt], 8, concurrency=1)
+    gw, _ = _start_gateway(dev, eng4, max_active=2, queue_cap=2)
+    try:
+        status, _, body = _raw_request(
+            gw.port, "POST", "/v1/chat/completions",
+            _chat_body(prompt, 8, stream=False))
+        assert status == 200
+        obj = json.loads(body)
+        assert obj["object"] == "chat.completion"
+        content = obj["choices"][0]["message"]["content"]
+        assert P.parse_tokens(content) == list(ref.outputs[0])
+        assert obj["usage"]["completion_tokens"] == 8
+
+        status, _, body = _raw_request(gw.port, "POST",
+                                       "/v1/chat/completions",
+                                       {"messages": "nope"})
+        assert status == 400
+    finally:
+        gw.close()
+
+
+# ---------------------------------------------------------------------
+# cancellation / disconnect: nothing leaks
+# ---------------------------------------------------------------------
+
+def test_cancel_releases_everything(dev, eng_paged):
+    """Cancelling a mid-flight stream whose blocks are shared (prefix
+    dedupe) on a swap-enabled paged engine leaks nothing: the block pool
+    returns to its empty baseline, every slot is back in the free list,
+    and no dead requests remain queued."""
+    server = SyneraServer(dev, eng_paged)
+    common = list(range(1, 17))          # one full shared prompt block
+    prompts = [common + p for p in _prompts(3, length=4)]
+    sessions = [server.open_session(p, 16) for p in prompts]
+    server.step()
+    server.step()
+    victim = sessions[1]
+    assert not victim.done
+    assert server.cancel(victim) is True
+    assert server.cancel(victim) is False          # idempotent
+    assert victim.cancelled and victim.metrics is None
+    while server.step():
+        pass
+
+    pool = eng_paged.pool_stats
+    assert pool["used_blocks"] == 0
+    assert pool["free_blocks"] == pool["n_blocks"]
+    assert pool["shared_blocks"] == 0
+    assert pool["swapped_blocks"] == 0
+    assert sorted(server.sched.free_slots) == list(
+        range(eng_paged.max_slots))
+    assert not server.sched.prefill_q
+    assert not server.sched.verify_q
+    assert not server.sched.active_verify
+    assert server._by_req == {}
+    st = server.stats()
+    assert st["cancelled_streams"] == 1
+    assert st["completed_streams"] == 2
+    # survivors still produced their full completions
+    for s in (sessions[0], sessions[2]):
+        assert len(s.metrics.tokens) == 16
+
+
+def test_socket_disconnect_frees_resources(dev, eng_paged):
+    """A client that drops its connection mid-stream triggers a cancel
+    through the gateway: the session is torn down and its blocks/slot
+    are released (polled via pool_stats, the leak baseline)."""
+    gw, server = _start_gateway(dev, eng_paged, max_active=2, queue_cap=2)
+    try:
+        prompt = _prompts(1, length=8)[0]
+        sock = socket.create_connection(("127.0.0.1", gw.port),
+                                        timeout=120)
+        body = json.dumps(_chat_body(prompt, 64)).encode()
+        sock.sendall((f"POST /v1/chat/completions HTTP/1.1\r\n"
+                      f"Host: t\r\nContent-Type: application/json\r\n"
+                      f"Content-Length: {len(body)}\r\n\r\n"
+                      ).encode() + body)
+        got = b""
+        while b"\n\n" not in got.partition(b"\r\n\r\n")[2]:
+            got += sock.recv(4096)      # at least the role chunk arrived
+        sock.close()                     # hang up mid-stream
+
+        deadline = time.monotonic() + 60
+        while time.monotonic() < deadline:
+            if (server.stats()["cancelled_streams"] >= 1
+                    and eng_paged.pool_stats["used_blocks"] == 0):
+                break
+            time.sleep(0.05)
+        st = server.stats()
+        assert st["cancelled_streams"] == 1
+        pool = eng_paged.pool_stats
+        assert pool["used_blocks"] == 0
+        assert pool["free_blocks"] == pool["n_blocks"]
+        assert pool["swapped_blocks"] == 0
+        assert sorted(server.sched.free_slots) == list(
+            range(eng_paged.max_slots))
+    finally:
+        gw.close()
+
+
+# ---------------------------------------------------------------------
+# backpressure + observability endpoints
+# ---------------------------------------------------------------------
+
+def test_backpressure_429_at_queue_cap(dev, eng4):
+    """With max_active=1 and queue_cap=1, a 6-way concurrent burst gets
+    at least one 429 (with Retry-After) and every accepted stream still
+    completes with a full, correct token stream."""
+    prompts = _prompts(6, length=6)
+    gw, server = _start_gateway(dev, eng4, max_active=1, queue_cap=1)
+    results = [None] * len(prompts)
+
+    def _one(i):
+        results[i] = _raw_request(gw.port, "POST", "/v1/chat/completions",
+                                  _chat_body(prompts[i], 8))
+
+    try:
+        threads = [threading.Thread(target=_one, args=(i,))
+                   for i in range(len(prompts))]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=300)
+        statuses = [r[0] for r in results]
+        assert statuses.count(429) >= 1
+        assert statuses.count(200) >= 2          # saturated, not bricked
+        for status, headers, body in results:
+            if status == 429:
+                assert "retry-after" in headers
+                assert json.loads(body)["error"]["type"] == \
+                    "rate_limit_error"
+            else:
+                frames = _sse_frames(body)
+                assert frames[-1] == b"[DONE]"
+                toks = P.parse_tokens("".join(
+                    json.loads(f)["choices"][0]["delta"].get("content", "")
+                    for f in frames[:-1]))
+                assert len(toks) == 8
+        st = server.stats()
+        assert st["rejected_requests"] == statuses.count(429)
+        assert st["completed_streams"] == statuses.count(200)
+    finally:
+        gw.close()
+
+
+def test_observability_endpoints(dev, eng4):
+    gw, server = _start_gateway(dev, eng4, max_active=2, queue_cap=2)
+    try:
+        status, _, body = _raw_request(gw.port, "GET", "/healthz")
+        assert status == 200 and json.loads(body)["status"] == "ok"
+
+        status, _, body = _raw_request(gw.port, "GET", "/v1/models")
+        assert status == 200
+        assert json.loads(body)["data"][0]["id"] == "synera-tiny"
+
+        # one request so the counters are nonzero, then both /metrics
+        # views must agree with the server's own stats()
+        _raw_request(gw.port, "POST", "/v1/chat/completions",
+                     _chat_body(_prompts(1)[0], 4))
+        deadline = time.monotonic() + 60
+        while (time.monotonic() < deadline
+               and server.stats()["completed_streams"] < 1):
+            time.sleep(0.05)
+
+        status, headers, body = _raw_request(
+            gw.port, "GET", "/metrics?format=json")
+        assert status == 200
+        js = json.loads(body)
+        direct = server.stats()
+        assert set(direct) <= set(js)        # + gateway_active/queued
+        for k in ("completed_streams", "rejected_requests",
+                  "cancelled_streams", "iterations"):
+            assert js[k] == direct[k]
+        assert js["clock"] == "wall"
+        assert js["modeled_ms"] > 0          # shadow modeled time advanced
+        assert js["gateway_active"] == 0
+
+        status, headers, body = _raw_request(gw.port, "GET", "/metrics")
+        assert status == 200
+        assert headers["content-type"].startswith("text/plain")
+        assert b"synera_completed_streams" in body
+        assert b"synera_queue_depth" in body
+
+        status, _, _ = _raw_request(gw.port, "GET", "/nope")
+        assert status == 404
+        status, _, _ = _raw_request(gw.port, "GET", "/v1/chat/completions")
+        assert status == 405
+    finally:
+        gw.close()
