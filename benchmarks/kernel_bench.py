@@ -102,6 +102,178 @@ def kernel_micro():
     return rows
 
 
+# ---------------------------------------------------------------------------
+# Paged-vs-dense sweep (PR 7: fused DMA + flash-decode split-KV)
+# ---------------------------------------------------------------------------
+
+def _build_paged(rng, B, bs, S, nkv, hd, tail=7):
+    """Random paged pool + block tables + the gathered dense view.
+
+    Streams hold ``S - tail`` tokens so the last block is ragged; block
+    ids are a random permutation of the pool (non-contiguous, like a
+    live allocator), and ``pad`` extra pool blocks stay unmapped.
+    """
+    mbps = S // bs
+    nb = mbps + 4
+    kp = rng.standard_normal((nb, bs, nkv, hd)).astype(np.float32)
+    vp = rng.standard_normal((nb, bs, nkv, hd)).astype(np.float32)
+    pos = np.full((nb, bs), -1, np.int32)
+    L = S - tail
+    bt = np.full((B, mbps), -1, np.int32)
+    kd = np.zeros((B, S, nkv, hd), np.float32)
+    vd = np.zeros((B, S, nkv, hd), np.float32)
+    kpos = np.full((B, S), -1, np.int32)
+    for b in range(B):
+        perm = rng.permutation(nb)[: -(-L // bs)]
+        for j, blk in enumerate(perm):
+            base = j * bs
+            n = min(bs, L - base)
+            pos[blk, :n] = np.arange(base, base + n)
+            bt[b, j] = blk
+            kd[b, base:base + n] = kp[blk, :n]
+            vd[b, base:base + n] = vp[blk, :n]
+            kpos[b, base:base + n] = np.arange(base, base + n)
+    J = jnp.asarray
+    return dict(k_pool=J(kp), v_pool=J(vp), pos_pool=J(pos), bt=J(bt),
+                kd=J(kd), vd=J(vd), kpos=J(kpos), L=L, mbps=mbps)
+
+
+def paged_micro(full: bool = True, n: int = 1):
+    """Paged-vs-dense rows: correctness (max_err vs the dense kernel on
+    the gathered view), interpreter cost ratio, and the grid-step
+    accounting the fused-DMA pass exists for (``step_reduction`` =
+    unfused KV-axis steps / fused steps; >= 4x at block_kv=128/bs=16).
+    """
+    from repro.kernels import paged as PG
+    from repro.kernels.decode_gqa.decode_gqa import (
+        decode_attention, decode_attention_paged)
+    from repro.kernels.partial_prefill.partial_prefill import (
+        partial_prefill_attention, partial_prefill_attention_paged)
+
+    rows = []
+    B, nh, nkv, hd, C = 1, 4, 2, 64, 32
+    rng = np.random.default_rng(11)
+    sizes = [(bs, S) for bs in (16, 32)
+             for S in ((512, 2048, 8192) if full else (512,))]
+    for bs, S in sizes:
+        # tail = bs + 7: ragged last block AND an unmapped trailing
+        # table entry, so every row exercises both mask paths
+        d = _build_paged(rng, B, bs, S, nkv, hd, tail=bs + 7)
+        L, mbps = d["L"], d["mbps"]
+        # decode: one query at the stream head
+        q1 = jnp.asarray(rng.standard_normal((B, nh, hd)), jnp.float32)
+        qpos1 = jnp.full((B,), L - 1, jnp.int32)
+        # partial prefill: a verify chunk of C tokens ending at the head
+        qC = jnp.asarray(rng.standard_normal((B, C, nh, hd)), jnp.float32)
+        qposC = jnp.tile(jnp.arange(L - C, L, dtype=jnp.int32), (B, 1))
+        fdec = jax.jit(lambda *a: decode_attention(*a, block_kv=256))
+        fpp = jax.jit(lambda *a: partial_prefill_attention(*a, block_kv=256))
+        dense = {
+            "decode": (_time(fdec, q1, d["kd"], d["vd"], qpos1, d["kpos"],
+                             n=n),
+                       fdec(q1, d["kd"], d["vd"], qpos1, d["kpos"])),
+            "partial_prefill": (_time(fpp, qC, d["kd"], d["vd"], qposC,
+                                      d["kpos"], n=n),
+                                fpp(qC, d["kd"], d["vd"], qposC,
+                                    d["kpos"])),
+        }
+        for blk, sp in ((bs, 1), (128, 1), (128, 4)):
+            gi = PG.paged_grid_info(mbps, bs, blk, sp)
+            for kind, paged_fn, qa, qp in (
+                ("decode", decode_attention_paged, q1, qpos1),
+                ("partial_prefill", partial_prefill_attention_paged, qC,
+                 qposC),
+            ):
+                f = jax.jit(lambda *a, _f=paged_fn, _b=blk, _s=sp: _f(
+                    *a, block_kv=_b, kv_splits=_s))
+                args = (qa, d["k_pool"], d["v_pool"], qp, d["pos_pool"],
+                        d["bt"])
+                us = _time(f, *args, n=n)
+                dus, oref = dense[kind]
+                err = float(jnp.abs(f(*args) - oref).max())
+                rows.append(dict(
+                    name=f"paged_{kind}", block_size=bs, S=S,
+                    block_kv=blk, kv_splits=sp, fuse=gi["fuse"],
+                    kv_steps=gi["kv_steps_total"],
+                    kv_steps_unfused=gi["kv_steps_unfused"],
+                    step_reduction=gi["kv_steps_unfused"]
+                    / gi["kv_steps_total"],
+                    tokens_per_step=gi["tokens_per_step"],
+                    us_per_call=us, dense_us_per_call=dus,
+                    paged_to_dense_ratio=us / dus, max_err=err,
+                    shape=f"B{B}xS{S}xh{nh}/{nkv}xd{hd}"))
+    return rows
+
+
+def paged_e2e_rows(max_new: int = 24, n_prompts: int = 3):
+    """Greedy token-stream identity, end to end: a paged+pallas engine
+    must emit byte-identical streams to the dense+pallas engine across
+    fuse/split settings (the serving-level restatement of max_err=0)."""
+    from repro.configs.synera_pair import tiny_pair
+    from repro.core.offload import OffloadPolicy
+    from repro.models import model as M
+    from repro.serving import synergy as SY
+    from repro.serving.device import DeviceRuntime
+    from repro.serving.engine import CloudEngine
+
+    slm_cfg, llm_cfg = tiny_pair(vocab=64)
+    llm_cfg = llm_cfg.replace(attn_impl="pallas")
+    slm_p = M.init_params(slm_cfg, jax.random.PRNGKey(0))
+    llm_p = M.init_params(llm_cfg, jax.random.PRNGKey(1))
+    rng = np.random.default_rng(5)
+    prompts = [[int(t) for t in rng.integers(1, 60, size=12)]
+               for _ in range(n_prompts)]
+
+    def streams(eng):
+        dev = DeviceRuntime(slm_cfg, slm_p, s_max=256, gamma=4, seed=0,
+                            policy=OffloadPolicy(mode="all"),
+                            use_early_exit=False, use_pi=False)
+        r = SY.run_synera(dev, eng, prompts, max_new)
+        return [[int(t) for t in o] for o in r.outputs]
+
+    ref = streams(CloudEngine(llm_cfg, llm_p, max_slots=2, s_max=256))
+    rows = []
+    for blk, sp in ((16, 1), (128, 1), (128, 4)):
+        out = streams(CloudEngine(llm_cfg, llm_p, max_slots=2, s_max=256,
+                                  cache_impl="paged", block_size=16,
+                                  paged_block_kv=blk, kv_splits=sp))
+        mism = sum(
+            len(a) != len(b) or any(x != y for x, y in zip(a, b))
+            for a, b in zip(ref, out))
+        rows.append(dict(name="paged_e2e_stream", block_size=16,
+                         block_kv=blk, kv_splits=sp, n_streams=len(ref),
+                         max_new=max_new, token_mismatches=mism))
+    return rows
+
+
+def paged_main(full: bool = True):
+    """Paged-kernel bench: prints the sweep, asserts correctness + the
+    fusion win, and (full mode) writes BENCH_paged_kernels.json."""
+    import json
+    import pathlib
+    rows = paged_micro(full=full)
+    e2e = paged_e2e_rows() if full else []
+    print(json.dumps(rows + e2e, indent=2))
+    bad = [r for r in rows if not r["max_err"] < 5e-5]
+    if bad:
+        raise SystemExit(f"paged kernel error vs dense oracle: {bad}")
+    weak = [r for r in rows
+            if r["block_kv"] == 128 and r["block_size"] == 16
+            and r["step_reduction"] < 4]
+    if weak:
+        raise SystemExit(f"fused-DMA step reduction below 4x: {weak}")
+    bad_e2e = [r for r in e2e if r["token_mismatches"] != 0]
+    if bad_e2e:
+        raise SystemExit(f"paged e2e streams diverged from dense: "
+                         f"{bad_e2e}")
+    if full:
+        out = pathlib.Path(__file__).parent / "BENCH_paged_kernels.json"
+        out.write_text(json.dumps(rows + e2e, indent=2) + "\n")
+        print(f"wrote {out}")
+    print(f"{len(rows)} paged rows OK"
+          + (f", {len(e2e)} e2e rows OK" if e2e else ""))
+
+
 def main():
     """CI smoke: every kernel must run (interpret mode) and match its
     oracle — a cheap early-warning for Pallas dispatch regressions."""
@@ -115,4 +287,10 @@ def main():
 
 
 if __name__ == "__main__":
-    main()
+    import sys
+    if "--paged" in sys.argv:
+        paged_main(full=True)
+    elif "--paged-smoke" in sys.argv:
+        paged_main(full=False)
+    else:
+        main()

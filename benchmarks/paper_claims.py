@@ -72,14 +72,17 @@ def make_engine(llm_cfg, llm_p, slots: int = 2, attn_impl: str | None = None,
                 pool_blocks: int | None = None,
                 share_prefix: bool | None = None,
                 swap: bool | None = None,
-                host_swap_blocks: int | None = None):
+                host_swap_blocks: int | None = None,
+                paged_block_kv: int | None = None,
+                kv_splits: int | None = None):
     cfg = llm_cfg if attn_impl is None else llm_cfg.replace(
         attn_impl=attn_impl)
     return CloudEngine(cfg, llm_p, max_slots=slots, s_max=S_MAX,
                        verify_top_k=verify_top_k, cache_impl=cache_impl,
                        block_size=block_size, pool_blocks=pool_blocks,
                        share_prefix=share_prefix, swap=swap,
-                       host_swap_blocks=host_swap_blocks)
+                       host_swap_blocks=host_swap_blocks,
+                       paged_block_kv=paged_block_kv, kv_splits=kv_splits)
 
 
 def profile_pair(dev, eng, evalset, task):

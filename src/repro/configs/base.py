@@ -104,6 +104,14 @@ class ModelConfig:
     # lengths and admission is bound by free blocks, not slot count.
     cache_impl: str = "dense"    # "dense" | "paged"
     kv_block_size: int = 16      # tokens per KV block when cache_impl="paged"
+    # Paged Pallas kernel streaming (attn_impl="pallas" + cache_impl=
+    # "paged"): each grid step fuses paged_block_kv // kv_block_size
+    # consecutive block-table entries into one dense-sized DMA, and
+    # paged_kv_splits > 1 adds flash-decode split-KV parallelism over
+    # the sequence axis (partials merged by a jnp epilogue; =1 is
+    # bit-identical to the single-pass kernel).
+    paged_block_kv: int = 128    # fused KV tokens per paged grid step
+    paged_kv_splits: int = 1     # parallel sequence splits (flash-decode)
     # Prefix sharing (paged only): dedupe identical leading full prompt
     # blocks across slots via ref-counted blocks; divergent writes into a
     # shared block fork a private copy (copy-on-write).

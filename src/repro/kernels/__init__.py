@@ -1,3 +1,18 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+
+
+def resolve_interpret(interpret):
+    """Resolve a kernel entry point's ``interpret`` argument.
+
+    ``None`` (the default everywhere) auto-detects: Pallas kernels
+    compile natively on TPU and run in interpret mode on every other
+    backend (structural validation on CPU CI).  An explicit bool always
+    wins, so callers can force either mode.
+    """
+    if interpret is not None:
+        return interpret
+    import jax
+
+    return jax.default_backend() != "tpu"

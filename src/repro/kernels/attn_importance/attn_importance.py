@@ -28,6 +28,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import resolve_interpret
+
 NEG_INF = -1e30
 
 
@@ -71,7 +73,8 @@ def _attn_imp_kernel(q_ref, k_ref, v_ref, qp_ref, kp_ref, o_ref, imp_ref, *,
 
 def attn_with_importance(q, k, v, q_pos=None, kv_pos=None, *,
                          causal: bool = True, q_offset: int = 0,
-                         block_q: int = 128, interpret: bool = True):
+                         block_q: int = 128,
+                         interpret: bool | None = None):
     """q: (B, Tq, nh, hd); k, v: (B, S, nkv, hd) with nh % nkv == 0.
 
     ``q_pos`` (B, Tq) / ``kv_pos`` (B, S) are optional explicit position
@@ -83,6 +86,7 @@ def attn_with_importance(q, k, v, q_pos=None, kv_pos=None, *,
     Returns (out (B, Tq, nh, hd), importance (B, nh, S)) — importance is
     the per-head column sum of the softmax matrix over the Tq query rows.
     """
+    interpret = resolve_interpret(interpret)
     B, Tq, nh, hd = q.shape
     S, nkv = k.shape[1], k.shape[2]
     g = nh // nkv

@@ -1,4 +1,8 @@
-"""jit'd public wrapper for the fused attention+importance kernel."""
+"""jit'd public wrapper for the fused attention+importance kernel.
+
+``interpret=None`` (the default) auto-detects the backend: compiled on
+TPU, interpreter everywhere else — callers no longer thread the flag.
+"""
 from __future__ import annotations
 
 from functools import partial
@@ -11,7 +15,8 @@ from repro.kernels.attn_importance.attn_importance import attn_with_importance
 
 @partial(jax.jit, static_argnames=("causal", "q_offset", "interpret"))
 def attention_with_importance(q, k, v, *, causal: bool = True,
-                              q_offset: int = 0, interpret: bool = True):
+                              q_offset: int = 0,
+                              interpret: bool | None = None):
     """Kernel entry point.  Returns (out, paper_importance (B, S)) where
     the paper's importance score is the head-mean of the per-head column
     sums (Synera Fig 2)."""

@@ -20,6 +20,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import resolve_interpret
+from repro.kernels import paged as PG
+
 NEG_INF = -1e30
 
 
@@ -66,12 +69,14 @@ def _decode_kernel(q_ref, k_ref, v_ref, qp_ref, kp_ref, o_ref,
 
 
 def decode_attention(q, k, v, q_pos, kv_pos, *, window: int = 0,
-                     block_kv: int = 512, interpret: bool = True):
+                     block_kv: int = 512, interpret: bool | None = None):
     """q: (B, nh, hd) one token per request; k, v: (B, S, nkv, hd);
     q_pos: (B,) int32 absolute position; kv_pos: (B, S) int32.
 
-    Returns out (B, nh, hd).
+    ``interpret=None`` auto-detects (compiled on TPU, interpreter
+    elsewhere).  Returns out (B, nh, hd).
     """
+    interpret = resolve_interpret(interpret)
     B, nh, hd = q.shape
     S, nkv = k.shape[1], k.shape[2]
     g = nh // nkv
@@ -121,13 +126,33 @@ def decode_attention(q, k, v, q_pos, kv_pos, *, window: int = 0,
 # Block-table (paged) variant: the KV cache is a shared pool of
 # fixed-size blocks; each slot's sequence is scattered across the pool
 # and addressed through its block table (vLLM/PagedAttention layout).
+#
+# Streaming design (see kernels/paged.py and docs/architecture.md):
+#   * fused DMA    -- each grid step issues ``fuse`` pool-block
+#     descriptors (consecutive table entries) in one pipeline step, so
+#     the KV axis runs ceil(max_bps / fuse) dense-sized transfers
+#     instead of max_bps single-block ones;
+#   * prefetch     -- the KV axis is marked ``arbitrary`` and every
+#     descriptor's index map resolves the *next* step's table entries
+#     through the scalar-prefetch table, so Mosaic's pipeline starts
+#     step N+1's fused DMA while step N computes (double buffering);
+#   * split-KV     -- a ``parallel`` split axis partitions the table
+#     into contiguous runs; each split writes partial (m, l, acc) and
+#     a jnp epilogue (PG.combine_splits) merges them — flash-decode,
+#     so one long context uses splits * B * nkv programs, not B * nkv.
 # ---------------------------------------------------------------------------
 
-def _decode_paged_kernel(bt_ref, q_ref, k_ref, v_ref, qp_ref, kp_ref, o_ref,
-                         m_scr, l_scr, acc_scr, *, n_bt: int, nkv: int,
-                         window: int, scale: float):
+def _decode_paged_kernel(bt_ref, q_ref, *refs, fuse: int, spb: int,
+                         max_bps: int, nkv: int, window: int, scale: float):
+    k_refs = refs[:fuse]
+    v_refs = refs[fuse:2 * fuse]
+    qp_ref = refs[2 * fuse]
+    kp_refs = refs[2 * fuse + 1:3 * fuse + 1]
+    om_ref, ol_ref, oa_ref, m_scr, l_scr, acc_scr = refs[3 * fuse + 1:]
+
     bk = pl.program_id(0)
-    sb = pl.program_id(1)
+    sp = pl.program_id(1)
+    sb = pl.program_id(2)
 
     @pl.when(sb == 0)
     def _init():
@@ -135,17 +160,28 @@ def _decode_paged_kernel(bt_ref, q_ref, k_ref, v_ref, qp_ref, kp_ref, o_ref,
         l_scr[...] = jnp.zeros_like(l_scr)
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
-    mapped = bt_ref[bk // nkv, sb] >= 0            # scalar: table entry valid
     q = q_ref[0].astype(jnp.float32) * scale       # (g, hd)
-    k = k_ref[0, 0].astype(jnp.float32)            # (bs, hd): one pool block
-    v = v_ref[0, 0].astype(jnp.float32)
     q_pos = qp_ref[0, 0]
-    kv_pos = kp_ref[0]                             # (bs,)
+    slot = bk // nkv
+    base = (sp * spb + sb) * fuse                  # first table entry here
 
-    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (g, bs)
-    valid = mapped & (kv_pos >= 0) & (kv_pos <= q_pos)
-    if window:
-        valid &= (q_pos - kv_pos) < window
+    ks, vs, valids = [], [], []
+    for j in range(fuse):
+        # per-sub-block mapped mask (replaces the unfused kernel's
+        # single ``mapped`` scalar): entry within table AND mapped
+        mapped = PG.subblock_mapped(bt_ref, slot, base + j, max_bps)
+        kv_pos = kp_refs[j][0]                     # (bs,)
+        val = mapped & (kv_pos >= 0) & (kv_pos <= q_pos)
+        if window:
+            val &= (q_pos - kv_pos) < window
+        ks.append(k_refs[j][0, 0])
+        vs.append(v_refs[j][0, 0])
+        valids.append(val)
+    k = jnp.concatenate(ks, axis=0).astype(jnp.float32)   # (fuse*bs, hd)
+    v = jnp.concatenate(vs, axis=0).astype(jnp.float32)
+    valid = jnp.concatenate(valids, axis=0)               # (fuse*bs,)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (g, fuse*bs)
     s = jnp.where(valid[None, :], s, NEG_INF)
 
     m_prev, l_prev, acc_prev = m_scr[...], l_scr[...], acc_scr[...]
@@ -161,30 +197,40 @@ def _decode_paged_kernel(bt_ref, q_ref, k_ref, v_ref, qp_ref, kp_ref, o_ref,
     l_scr[...] = l_new
     acc_scr[...] = acc_new
 
-    @pl.when(sb == n_bt - 1)
+    @pl.when(sb == spb - 1)
     def _finish():
-        l = jnp.where(l_new == 0.0, 1.0, l_new)
-        o_ref[0] = (acc_new / l[:, None]).astype(o_ref.dtype)
+        om_ref[0, 0] = m_new
+        ol_ref[0, 0] = l_new
+        oa_ref[0, 0] = acc_new
 
 
 def decode_attention_paged(q, k_pool, v_pool, q_pos, pos_pool, block_tables,
-                           *, window: int = 0, interpret: bool = True):
+                           *, window: int = 0, block_kv: int | None = None,
+                           kv_splits: int = 1,
+                           interpret: bool | None = None):
     """q: (B, nh, hd); k_pool, v_pool: (nb, bs, nkv, hd) shared block
     pool; q_pos: (B,) int32; pos_pool: (nb, bs) int32 (absolute position
     of each pool row, -1 = invalid); block_tables: (B, max_bps) int32
     pool block ids per slot (-1 = unmapped).
 
-    The block table is a scalar-prefetch operand: the grid's KV axis
-    walks the table, and each program's index map reads the table to DMA
-    exactly that slot's pool block — no gathered (B, s_max) copy exists.
-    Unmapped entries clamp to block 0 for the DMA and are masked wholesale
-    in the kernel.  Returns out (B, nh, hd).
+    The block table is a scalar-prefetch operand: each grid step's index
+    maps read ``fuse = block_kv // bs`` consecutive table entries and DMA
+    exactly those pool blocks — no gathered (B, s_max) copy exists, and
+    the KV axis walks ceil(max_bps / fuse) dense-sized fused transfers
+    (``block_kv=None`` keeps legacy one-block steps).  ``kv_splits > 1``
+    adds a parallel flash-decode split axis over the sequence; partial
+    (m, l, acc) outputs are merged by :func:`repro.kernels.paged.
+    combine_splits` (bit-identical to single-pass at ``kv_splits=1``).
+    Unmapped / past-the-table entries clamp for the DMA and are masked
+    per sub-block in the kernel.  Returns out (B, nh, hd).
     """
+    interpret = resolve_interpret(interpret)
     B, nh, hd = q.shape
     nb, bs, nkv = k_pool.shape[0], k_pool.shape[1], k_pool.shape[2]
     g = nh // nkv
     max_bps = block_tables.shape[1]
     scale = 1.0 / (hd ** 0.5)
+    fuse, splits, spb = PG.fused_layout(max_bps, bs, block_kv, kv_splits)
 
     qg = q.reshape(B * nkv, g, hd)
     kh = jnp.moveaxis(k_pool, 2, 1)                # (nb, nkv, bs, hd)
@@ -192,26 +238,40 @@ def decode_attention_paged(q, k_pool, v_pool, q_pos, pos_pool, block_tables,
     qp = q_pos.reshape(B, 1).astype(jnp.int32)
     bt = block_tables.astype(jnp.int32)
 
-    kernel = functools.partial(_decode_paged_kernel, n_bt=max_bps, nkv=nkv,
-                               window=window, scale=scale)
+    kernel = functools.partial(_decode_paged_kernel, fuse=fuse, spb=spb,
+                               max_bps=max_bps, nkv=nkv, window=window,
+                               scale=scale)
 
-    def kv_map(bk, sb, bt, nkv=nkv):
-        return (jnp.maximum(bt[bk // nkv, sb], 0), bk % nkv, 0, 0)
+    def kv_map(j, nkv=nkv):
+        def m(bk, sp, sb, bt):
+            e = (sp * spb + sb) * fuse + j
+            return (PG.table_entry(bt, bk // nkv, e, max_bps),
+                    bk % nkv, 0, 0)
+        return m
+
+    def pos_map(j, nkv=nkv):
+        def m(bk, sp, sb, bt):
+            e = (sp * spb + sb) * fuse + j
+            return (PG.table_entry(bt, bk // nkv, e, max_bps), 0)
+        return m
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
-        grid=(B * nkv, max_bps),
+        grid=(B * nkv, splits, spb),
         in_specs=[
-            pl.BlockSpec((1, g, hd), lambda bk, sb, bt: (bk, 0, 0)),
-            pl.BlockSpec((1, 1, bs, hd), kv_map),
-            pl.BlockSpec((1, 1, bs, hd), kv_map),
+            pl.BlockSpec((1, g, hd), lambda bk, sp, sb, bt: (bk, 0, 0)),
+            *[pl.BlockSpec((1, 1, bs, hd), kv_map(j)) for j in range(fuse)],
+            *[pl.BlockSpec((1, 1, bs, hd), kv_map(j)) for j in range(fuse)],
             pl.BlockSpec((1, 1),
-                         lambda bk, sb, bt, nkv=nkv: (bk // nkv, 0)),
-            pl.BlockSpec((1, bs),
-                         lambda bk, sb, bt, nkv=nkv: (
-                             jnp.maximum(bt[bk // nkv, sb], 0), 0)),
+                         lambda bk, sp, sb, bt, nkv=nkv: (bk // nkv, 0)),
+            *[pl.BlockSpec((1, bs), pos_map(j)) for j in range(fuse)],
         ],
-        out_specs=pl.BlockSpec((1, g, hd), lambda bk, sb, bt: (bk, 0, 0)),
+        out_specs=[
+            pl.BlockSpec((1, 1, g), lambda bk, sp, sb, bt: (bk, sp, 0)),
+            pl.BlockSpec((1, 1, g), lambda bk, sp, sb, bt: (bk, sp, 0)),
+            pl.BlockSpec((1, 1, g, hd),
+                         lambda bk, sp, sb, bt: (bk, sp, 0, 0)),
+        ],
         scratch_shapes=[
             pltpu.VMEM((g,), jnp.float32),
             pltpu.VMEM((g,), jnp.float32),
@@ -219,11 +279,18 @@ def decode_attention_paged(q, k_pool, v_pool, q_pos, pos_pool, block_tables,
         ],
     )
 
-    out = pl.pallas_call(
+    m, l, acc = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((B * nkv, g, hd), q.dtype),
+        out_shape=[
+            jax.ShapeDtypeStruct((B * nkv, splits, g), jnp.float32),
+            jax.ShapeDtypeStruct((B * nkv, splits, g), jnp.float32),
+            jax.ShapeDtypeStruct((B * nkv, splits, g, hd), jnp.float32),
+        ],
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
-    )(bt, qg, kh, vh, qp, pos_pool)
+    )(bt, qg, *[kh] * fuse, *[vh] * fuse, qp, *[pos_pool] * fuse)
 
+    out = PG.combine_splits(m, l, acc, q.dtype)
     return out.reshape(B, nh, hd)

@@ -1,4 +1,8 @@
-"""jit'd wrapper for the GQA decode kernel."""
+"""jit'd wrapper for the GQA decode kernel.
+
+``interpret=None`` (the default) auto-detects the backend: compiled on
+TPU, interpreter everywhere else — callers no longer thread the flag.
+"""
 from __future__ import annotations
 
 from functools import partial
@@ -11,14 +15,17 @@ from repro.kernels.decode_gqa.decode_gqa import (decode_attention,
 
 @partial(jax.jit, static_argnames=("window", "block_kv", "interpret"))
 def gqa_decode(q, k, v, q_pos, kv_pos, *, window: int = 0,
-               block_kv: int = 512, interpret: bool = True):
+               block_kv: int = 512, interpret: bool | None = None):
     return decode_attention(q, k, v, q_pos, kv_pos, window=window,
                             block_kv=block_kv, interpret=interpret)
 
 
-@partial(jax.jit, static_argnames=("window", "interpret"))
+@partial(jax.jit, static_argnames=("window", "block_kv", "kv_splits",
+                                   "interpret"))
 def gqa_decode_paged(q, k_pool, v_pool, q_pos, pos_pool, block_tables, *,
-                     window: int = 0, interpret: bool = True):
+                     window: int = 0, block_kv: int | None = None,
+                     kv_splits: int = 1, interpret: bool | None = None):
     return decode_attention_paged(q, k_pool, v_pool, q_pos, pos_pool,
                                   block_tables, window=window,
+                                  block_kv=block_kv, kv_splits=kv_splits,
                                   interpret=interpret)

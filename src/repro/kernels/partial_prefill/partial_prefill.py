@@ -26,6 +26,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import resolve_interpret
+from repro.kernels import paged as PG
+
 NEG_INF = -1e30
 
 
@@ -73,12 +76,15 @@ def _pp_kernel(q_ref, k_ref, v_ref, qp_ref, kp_ref, o_ref,
 
 
 def partial_prefill_attention(q, k, v, q_pos, kv_pos, *, window: int = 0,
-                              block_kv: int = 512, interpret: bool = True):
+                              block_kv: int = 512,
+                              interpret: bool | None = None):
     """q: (B, C, nh, hd); k, v: (B, S, nkv, hd); q_pos: (B, C) int32;
     kv_pos: (B, S) int32 (cache slot positions, -1 = invalid).
 
-    Returns out (B, C, nh, hd).
+    ``interpret=None`` auto-detects (compiled on TPU, interpreter
+    elsewhere).  Returns out (B, C, nh, hd).
     """
+    interpret = resolve_interpret(interpret)
     B, C, nh, hd = q.shape
     S, nkv = k.shape[1], k.shape[2]
     g = nh // nkv
@@ -126,13 +132,23 @@ def partial_prefill_attention(q, k, v, q_pos, kv_pos, *, window: int = 0,
 # ---------------------------------------------------------------------------
 # Block-table (paged) variant: the cached prefix lives in a shared pool
 # of fixed-size blocks addressed through per-slot block tables.
+#
+# Same streaming design as decode_gqa's paged variant (fused multi-block
+# DMA + prefetch-friendly arbitrary KV axis + parallel split-KV with a
+# jnp combine epilogue); shared machinery lives in kernels/paged.py.
 # ---------------------------------------------------------------------------
 
-def _pp_paged_kernel(bt_ref, q_ref, k_ref, v_ref, qp_ref, kp_ref, o_ref,
-                     m_scr, l_scr, acc_scr, *, n_bt: int, nh: int,
-                     window: int, scale: float):
+def _pp_paged_kernel(bt_ref, q_ref, *refs, fuse: int, spb: int,
+                     max_bps: int, nh: int, window: int, scale: float):
+    k_refs = refs[:fuse]
+    v_refs = refs[fuse:2 * fuse]
+    qp_ref = refs[2 * fuse]
+    kp_refs = refs[2 * fuse + 1:3 * fuse + 1]
+    om_ref, ol_ref, oa_ref, m_scr, l_scr, acc_scr = refs[3 * fuse + 1:]
+
     bh = pl.program_id(0)
-    sb = pl.program_id(1)
+    sp = pl.program_id(1)
+    sb = pl.program_id(2)
 
     @pl.when(sb == 0)
     def _init():
@@ -140,18 +156,29 @@ def _pp_paged_kernel(bt_ref, q_ref, k_ref, v_ref, qp_ref, kp_ref, o_ref,
         l_scr[...] = jnp.zeros_like(l_scr)
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
-    mapped = bt_ref[bh // nh, sb] >= 0
     q = q_ref[0].astype(jnp.float32) * scale       # (C, hd)
-    k = k_ref[0, 0].astype(jnp.float32)            # (bs, hd): one pool block
-    v = v_ref[0, 0].astype(jnp.float32)
     q_pos = qp_ref[0]                              # (C,)
-    kv_pos = kp_ref[0]                             # (bs,)
+    slot = bh // nh
+    base = (sp * spb + sb) * fuse                  # first table entry here
 
-    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (C, bs)
-    valid = mapped & (kv_pos[None, :] >= 0) & (q_pos[:, None] >= 0) \
-        & (kv_pos[None, :] <= q_pos[:, None])
-    if window:
-        valid &= (q_pos[:, None] - kv_pos[None, :]) < window
+    ks, vs, valids = [], [], []
+    for j in range(fuse):
+        # per-sub-block mapped mask (replaces the unfused kernel's
+        # single ``mapped`` scalar): entry within table AND mapped
+        mapped = PG.subblock_mapped(bt_ref, slot, base + j, max_bps)
+        kv_pos = kp_refs[j][0]                     # (bs,)
+        val = mapped & (kv_pos[None, :] >= 0) & (q_pos[:, None] >= 0) \
+            & (kv_pos[None, :] <= q_pos[:, None])
+        if window:
+            val &= (q_pos[:, None] - kv_pos[None, :]) < window
+        ks.append(k_refs[j][0, 0])
+        vs.append(v_refs[j][0, 0])
+        valids.append(val)                         # (C, bs)
+    k = jnp.concatenate(ks, axis=0).astype(jnp.float32)   # (fuse*bs, hd)
+    v = jnp.concatenate(vs, axis=0).astype(jnp.float32)
+    valid = jnp.concatenate(valids, axis=1)               # (C, fuse*bs)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (C, fuse*bs)
     s = jnp.where(valid, s, NEG_INF)
 
     m_prev, l_prev, acc_prev = m_scr[...], l_scr[...], acc_scr[...]
@@ -167,54 +194,77 @@ def _pp_paged_kernel(bt_ref, q_ref, k_ref, v_ref, qp_ref, kp_ref, o_ref,
     l_scr[...] = l_new
     acc_scr[...] = acc_new
 
-    @pl.when(sb == n_bt - 1)
+    @pl.when(sb == spb - 1)
     def _finish():
-        l = jnp.where(l_new == 0.0, 1.0, l_new)
-        o_ref[0] = (acc_new / l[:, None]).astype(o_ref.dtype)
+        om_ref[0, 0] = m_new
+        ol_ref[0, 0] = l_new
+        oa_ref[0, 0] = acc_new
 
 
 def partial_prefill_attention_paged(q, k_pool, v_pool, q_pos, pos_pool,
                                     block_tables, *, window: int = 0,
-                                    interpret: bool = True):
+                                    block_kv: int | None = None,
+                                    kv_splits: int = 1,
+                                    interpret: bool | None = None):
     """q: (B, C, nh, hd); k_pool, v_pool: (nb, bs, nkv, hd) shared block
     pool; q_pos: (B, C) int32; pos_pool: (nb, bs) int32; block_tables:
     (B, max_bps) int32 (-1 = unmapped).
 
-    Same scalar-prefetch design as ``decode_attention_paged``: the
-    grid's KV axis walks each slot's block table and DMAs exactly the
-    mapped pool blocks; unmapped entries clamp to block 0 and are masked
-    in full.  Returns out (B, C, nh, hd).
+    Same scalar-prefetch streaming design as ``decode_attention_paged``:
+    each grid step DMAs ``fuse = block_kv // bs`` consecutive table
+    entries (``block_kv=None`` keeps legacy one-block steps), the KV
+    axis is prefetch-pipelined, and ``kv_splits > 1`` parallelizes over
+    contiguous runs of the table with a jnp combine epilogue.  Unmapped
+    or past-the-table entries clamp for the DMA and are masked per
+    sub-block.  Returns out (B, C, nh, hd).
     """
+    interpret = resolve_interpret(interpret)
     B, C, nh, hd = q.shape
     nb, bs, nkv = k_pool.shape[0], k_pool.shape[1], k_pool.shape[2]
     g = nh // nkv
     max_bps = block_tables.shape[1]
     scale = 1.0 / (hd ** 0.5)
+    fuse, splits, spb = PG.fused_layout(max_bps, bs, block_kv, kv_splits)
 
     qh = jnp.moveaxis(q, 2, 1).reshape(B * nh, C, hd)
     kh = jnp.moveaxis(k_pool, 2, 1)                # (nb, nkv, bs, hd)
     vh = jnp.moveaxis(v_pool, 2, 1)
     bt = block_tables.astype(jnp.int32)
 
-    kernel = functools.partial(_pp_paged_kernel, n_bt=max_bps, nh=nh,
-                               window=window, scale=scale)
+    kernel = functools.partial(_pp_paged_kernel, fuse=fuse, spb=spb,
+                               max_bps=max_bps, nh=nh, window=window,
+                               scale=scale)
 
-    def kv_map(bh, sb, bt, nh=nh, g=g):
-        return (jnp.maximum(bt[bh // nh, sb], 0), (bh % nh) // g, 0, 0)
+    def kv_map(j, nh=nh, g=g):
+        def m(bh, sp, sb, bt):
+            e = (sp * spb + sb) * fuse + j
+            return (PG.table_entry(bt, bh // nh, e, max_bps),
+                    (bh % nh) // g, 0, 0)
+        return m
+
+    def pos_map(j, nh=nh):
+        def m(bh, sp, sb, bt):
+            e = (sp * spb + sb) * fuse + j
+            return (PG.table_entry(bt, bh // nh, e, max_bps), 0)
+        return m
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
-        grid=(B * nh, max_bps),
+        grid=(B * nh, splits, spb),
         in_specs=[
-            pl.BlockSpec((1, C, hd), lambda bh, sb, bt: (bh, 0, 0)),
-            pl.BlockSpec((1, 1, bs, hd), kv_map),
-            pl.BlockSpec((1, 1, bs, hd), kv_map),
-            pl.BlockSpec((1, C), lambda bh, sb, bt, nh=nh: (bh // nh, 0)),
-            pl.BlockSpec((1, bs),
-                         lambda bh, sb, bt, nh=nh: (
-                             jnp.maximum(bt[bh // nh, sb], 0), 0)),
+            pl.BlockSpec((1, C, hd), lambda bh, sp, sb, bt: (bh, 0, 0)),
+            *[pl.BlockSpec((1, 1, bs, hd), kv_map(j)) for j in range(fuse)],
+            *[pl.BlockSpec((1, 1, bs, hd), kv_map(j)) for j in range(fuse)],
+            pl.BlockSpec((1, C),
+                         lambda bh, sp, sb, bt, nh=nh: (bh // nh, 0)),
+            *[pl.BlockSpec((1, bs), pos_map(j)) for j in range(fuse)],
         ],
-        out_specs=pl.BlockSpec((1, C, hd), lambda bh, sb, bt: (bh, 0, 0)),
+        out_specs=[
+            pl.BlockSpec((1, 1, C), lambda bh, sp, sb, bt: (bh, sp, 0)),
+            pl.BlockSpec((1, 1, C), lambda bh, sp, sb, bt: (bh, sp, 0)),
+            pl.BlockSpec((1, 1, C, hd),
+                         lambda bh, sp, sb, bt: (bh, sp, 0, 0)),
+        ],
         scratch_shapes=[
             pltpu.VMEM((C,), jnp.float32),
             pltpu.VMEM((C,), jnp.float32),
@@ -222,11 +272,18 @@ def partial_prefill_attention_paged(q, k_pool, v_pool, q_pos, pos_pool,
         ],
     )
 
-    out = pl.pallas_call(
+    m, l, acc = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((B * nh, C, hd), q.dtype),
+        out_shape=[
+            jax.ShapeDtypeStruct((B * nh, splits, C), jnp.float32),
+            jax.ShapeDtypeStruct((B * nh, splits, C), jnp.float32),
+            jax.ShapeDtypeStruct((B * nh, splits, C, hd), jnp.float32),
+        ],
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
-    )(bt, qh, kh, vh, q_pos, pos_pool)
+    )(bt, qh, *[kh] * fuse, *[vh] * fuse, q_pos, *[pos_pool] * fuse)
 
+    out = PG.combine_splits(m, l, acc, q.dtype)
     return jnp.moveaxis(out.reshape(B, nh, C, hd), 1, 2)

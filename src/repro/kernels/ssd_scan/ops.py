@@ -1,5 +1,9 @@
 """jit'd wrapper for the SSD scan kernel (adds the D skip term the model
-path applies, so it is drop-in for models/layers.mamba_block)."""
+path applies, so it is drop-in for models/layers.mamba_block).
+
+``interpret=None`` (the default) auto-detects the backend: compiled on
+TPU, interpreter everywhere else — callers no longer thread the flag.
+"""
 from __future__ import annotations
 
 from functools import partial
@@ -12,7 +16,7 @@ from repro.kernels.ssd_scan.ssd_scan import ssd_scan
 
 @partial(jax.jit, static_argnames=("chunk", "interpret"))
 def ssd(x, dt, A, Bm, Cm, D=None, *, chunk: int = 64, h0=None,
-        interpret: bool = True):
+        interpret: bool | None = None):
     y, h = ssd_scan(x, dt, A, Bm, Cm, chunk=chunk, h0=h0,
                     interpret=interpret)
     if D is not None:

@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import resolve_interpret
+
 
 def _ssd_kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, h0_ref,
                 y_ref, hout_ref, state_scr, *, n_chunks: int, chunk: int,
@@ -71,13 +73,14 @@ def _ssd_kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, h0_ref,
 
 
 def ssd_scan(x, dt, A, Bm, Cm, *, chunk: int = 64, h0=None,
-             interpret: bool = True):
+             interpret: bool | None = None):
     """x: (B, L, H, P); dt: (B, L, H) (softplus'd); A: (H,) negative;
     Bm, Cm: (B, L, N); h0: (B, H, P, N) or None.
 
     Returns (y (B, L, H, P), h_final (B, H, P, N)).  L is padded to a
     chunk multiple with dt=0 (a no-op on the state).
     """
+    interpret = resolve_interpret(interpret)
     B, L, H, P = x.shape
     N = Bm.shape[-1]
     Q = min(chunk, L)

@@ -72,6 +72,19 @@ def main():
     ap.add_argument("--block-size", type=int, default=None,
                     help="tokens per KV block (paged cache; must divide "
                          "the engine s_max)")
+    ap.add_argument("--block-kv", type=int, default=None,
+                    help="paged Pallas kernels only (--cache-impl paged "
+                         "--attn-impl pallas): KV tokens fused into one "
+                         "DMA per grid step; block-kv // block-size "
+                         "consecutive block-table entries stream "
+                         "together (unset: cfg.paged_block_kv)")
+    ap.add_argument("--kv-splits", type=int, default=None,
+                    help="paged Pallas kernels only: flash-decode "
+                         "split-KV — partition the sequence axis into N "
+                         "parallel splits whose online-softmax partials "
+                         "are merged by a jnp epilogue; 1 is bit-"
+                         "identical to the single-pass kernel (unset: "
+                         "cfg.paged_kv_splits)")
     ap.add_argument("--pool-blocks", type=int, default=None,
                     help="total blocks in the paged pool (default: dense "
                          "capacity, slots x s_max / block-size; smaller "
@@ -158,7 +171,9 @@ def main():
                          pool_blocks=args.pool_blocks,
                          share_prefix=args.share_prefix,
                          swap=args.swap,
-                         host_swap_blocks=args.host_swap_blocks)
+                         host_swap_blocks=args.host_swap_blocks,
+                         paged_block_kv=args.block_kv,
+                         kv_splits=args.kv_splits)
     concurrency = None if args.concurrency == 0 else args.concurrency
     arrivals = None
     if args.arrival_rate > 0:

@@ -191,12 +191,6 @@ def blocked_attention(q, k, v, q_pos, kv_pos, *, block_kv: int = 1024,
     return out.astype(q.dtype)
 
 
-def _pallas_interpret() -> bool:
-    """Pallas kernels compile natively on TPU; everywhere else they run
-    in interpret mode (structural validation on CPU CI)."""
-    return jax.default_backend() != "tpu"
-
-
 def pallas_attention(q, k, v, q_pos, kv_pos, *, block_kv: int = 1024,
                      window: int = 0, causal: bool = True,
                      return_importance: bool = False):
@@ -219,7 +213,6 @@ def pallas_attention(q, k, v, q_pos, kv_pos, *, block_kv: int = 1024,
     from repro.kernels.partial_prefill.partial_prefill import (
         partial_prefill_attention)
 
-    interpret = _pallas_interpret()
     q_pos = q_pos.astype(jnp.int32)
     kv_pos = kv_pos.astype(jnp.int32)
     if return_importance:
@@ -227,16 +220,15 @@ def pallas_attention(q, k, v, q_pos, kv_pos, *, block_kv: int = 1024,
             return naive_attention(q, k, v, q_pos, kv_pos, window=window,
                                    causal=causal, return_importance=True)
         out, imp = attn_with_importance(q, k, v, q_pos, kv_pos,
-                                        causal=causal, interpret=interpret)
+                                        causal=causal)
         # paper importance (§3.2): head mean of per-head column sums
         return out, imp.mean(axis=1)
     if q.shape[1] == 1:
         out = decode_attention(q[:, 0], k, v, q_pos[:, 0], kv_pos,
-                               window=window, block_kv=block_kv,
-                               interpret=interpret)
+                               window=window, block_kv=block_kv)
         return out[:, None], None
     out = partial_prefill_attention(q, k, v, q_pos, kv_pos, window=window,
-                                    block_kv=block_kv, interpret=interpret)
+                                    block_kv=block_kv)
     return out, None
 
 
@@ -397,26 +389,30 @@ def paged_kv_view(cache):
             pos.reshape(B, mb * bs))
 
 
-def paged_pallas_attention(q, cache, q_pos, *, window: int = 0):
+def paged_pallas_attention(q, cache, q_pos, *, window: int = 0,
+                           block_kv: int | None = None, kv_splits: int = 1):
     """Dispatch the block-table-aware Pallas kernels over the pool
     directly (no gathered copy is materialized): ``decode_gqa`` for
-    T == 1, ``partial_prefill`` for verification chunks.  Interpret-mode
-    fallback off-TPU, same as the dense kernels."""
+    T == 1, ``partial_prefill`` for verification chunks.  ``block_kv``
+    sets the fused-DMA width (table entries per grid step =
+    ``block_kv // kv_block_size``); ``kv_splits`` the flash-decode
+    split-KV parallelism.  Interpret-mode fallback off-TPU, same as the
+    dense kernels."""
     from repro.kernels.decode_gqa.decode_gqa import decode_attention_paged
     from repro.kernels.partial_prefill.partial_prefill import (
         partial_prefill_attention_paged)
 
-    interpret = _pallas_interpret()
     q_pos = q_pos.astype(jnp.int32)
     k, v = cache["k"], cache["v"]
     pos, bt = cache["pos"], cache["block_tables"]
     if q.shape[1] == 1:
         out = decode_attention_paged(q[:, 0], k, v, q_pos[:, 0], pos, bt,
-                                     window=window, interpret=interpret)
+                                     window=window, block_kv=block_kv,
+                                     kv_splits=kv_splits)
         return out[:, None]
     return partial_prefill_attention_paged(q, k, v, q_pos, pos, bt,
-                                           window=window,
-                                           interpret=interpret)
+                                           window=window, block_kv=block_kv,
+                                           kv_splits=kv_splits)
 
 
 # ---------------------------------------------------------------------------
@@ -483,8 +479,10 @@ def attn_block(p, x, positions, cfg, cache=None, *, kv_x=None, kv_pos=None,
         if (cfg.attn_impl == "pallas" and causal and not return_importance):
             # block-table-aware kernels read the pool in place — the
             # (B, s_max) gathered copy is never materialized
-            out = paged_pallas_attention(q, new_cache, positions,
-                                         window=window)
+            out = paged_pallas_attention(
+                q, new_cache, positions, window=window,
+                block_kv=getattr(cfg, "paged_block_kv", None),
+                kv_splits=getattr(cfg, "paged_kv_splits", 1))
             out = out.reshape(B, T, nh * hd) @ p["wo"]
             return out, new_cache, None
         k_all, v_all, kv_positions = paged_kv_view(new_cache)

@@ -448,7 +448,15 @@ class CloudEngine:
                  pool_blocks: int | None = None,
                  share_prefix: bool | None = None,
                  swap: bool | None = None,
-                 host_swap_blocks: int | None = None):
+                 host_swap_blocks: int | None = None,
+                 paged_block_kv: int | None = None,
+                 kv_splits: int | None = None):
+        # paged-kernel streaming knobs (fused-DMA width / flash-decode
+        # split-KV) ride on the config so the jitted steps see them
+        if paged_block_kv is not None:
+            cfg = cfg.replace(paged_block_kv=paged_block_kv)
+        if kv_splits is not None:
+            cfg = cfg.replace(paged_kv_splits=kv_splits)
         self.cfg = cfg
         self.params = params
         self.max_slots = max_slots

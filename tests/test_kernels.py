@@ -137,20 +137,28 @@ def _random_paged_cache(rng, B, nb, bs, mbps, nkv, hd, lens, dtype):
     return kp, vp, pos, bt, kd, vd, posd
 
 
+# (block_kv, kv_splits): unfused single-pass (the legacy layout), fused
+# multi-block DMA, and fused + flash-decode split-KV.
+PAGED_VARIANTS = [(None, 1), (128, 1), (64, 4)]
+
+
 @pytest.mark.parametrize("B,nb,bs,mbps,nh,nkv,hd,window", [
     (3, 24, 8, 6, 4, 2, 32, 0),
     (2, 12, 16, 4, 8, 8, 64, 0),
     (2, 40, 8, 8, 4, 1, 16, 24),    # MQA + sliding window
 ])
+@pytest.mark.parametrize("blkv,splits", PAGED_VARIANTS)
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
-def test_decode_gqa_paged(B, nb, bs, mbps, nh, nkv, hd, window, dtype):
+def test_decode_gqa_paged(B, nb, bs, mbps, nh, nkv, hd, window, blkv,
+                          splits, dtype):
     rng = np.random.default_rng(11)
     lens = [int(rng.integers(2, mbps * bs)) for _ in range(B)]
     kp, vp, pos, bt, kd, vd, posd = _random_paged_cache(
         rng, B, nb, bs, mbps, nkv, hd, lens, dtype)
     q = jax.random.normal(jax.random.PRNGKey(9), (B, nh, hd), dtype)
     qp = jnp.asarray([L - 1 for L in lens], jnp.int32)
-    o1 = decode_attention_paged(q, kp, vp, qp, pos, bt, window=window)
+    o1 = decode_attention_paged(q, kp, vp, qp, pos, bt, window=window,
+                                block_kv=blkv, kv_splits=splits)
     o2 = decode_attention_ref(q, kd, vd, qp, posd, window=window)
     np.testing.assert_allclose(np.asarray(o1, np.float32),
                                np.asarray(o2, np.float32), **TOL[dtype])
@@ -161,9 +169,10 @@ def test_decode_gqa_paged(B, nb, bs, mbps, nh, nkv, hd, window, dtype):
     (1, 16, 12, 16, 4, 8, 8, 64, 0),
     (2, 4, 40, 8, 8, 4, 1, 16, 24),
 ])
+@pytest.mark.parametrize("blkv,splits", PAGED_VARIANTS)
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_partial_prefill_paged(B, C, nb, bs, mbps, nh, nkv, hd, window,
-                               dtype):
+                               blkv, splits, dtype):
     rng = np.random.default_rng(13)
     lens = [int(rng.integers(C + 1, mbps * bs)) for _ in range(B)]
     kp, vp, pos, bt, kd, vd, posd = _random_paged_cache(
@@ -177,12 +186,48 @@ def test_partial_prefill_paged(B, C, nb, bs, mbps, nh, nkv, hd, window,
         qp[b, :nq] = lens[b] - nq + np.arange(nq)
     qp = jnp.asarray(qp)
     o1 = partial_prefill_attention_paged(q, kp, vp, qp, pos, bt,
-                                         window=window)
+                                         window=window, block_kv=blkv,
+                                         kv_splits=splits)
     o2 = partial_prefill_ref(q, kd, vd, qp, posd, window=window)
     mask = (np.asarray(qp) >= 0)[:, :, None, None]
     np.testing.assert_allclose(np.asarray(o1, np.float32) * mask,
                                np.asarray(o2, np.float32) * mask,
                                **TOL[dtype])
+
+
+@pytest.mark.parametrize("kind", ["decode", "partial_prefill"])
+def test_paged_split_kv_degenerates(kind):
+    """Flash-decode split-KV: kv_splits in {1, 2, 4} agree with each
+    other (combine epilogue is order-insensitive up to f32 rounding) and
+    kv_splits=1 is the single-pass kernel — its combine is an exact
+    no-op, so it matches the unfused default bit-for-bit when fuse=1."""
+    rng = np.random.default_rng(17)
+    B, nb, bs, mbps, nh, nkv, hd, C = 2, 24, 8, 6, 4, 2, 32, 8
+    lens = [int(rng.integers(C + 1, mbps * bs)) for _ in range(B)]
+    kp, vp, pos, bt, kd, vd, posd = _random_paged_cache(
+        rng, B, nb, bs, mbps, nkv, hd, lens, jnp.float32)
+    if kind == "decode":
+        q = jax.random.normal(jax.random.PRNGKey(21), (B, nh, hd))
+        qp = jnp.asarray([L - 1 for L in lens], jnp.int32)
+        run = lambda sp, blkv=None: decode_attention_paged(
+            q, kp, vp, qp, pos, bt, block_kv=blkv, kv_splits=sp)
+        oracle = decode_attention_ref(q, kd, vd, qp, posd)
+    else:
+        q = jax.random.normal(jax.random.PRNGKey(22), (B, C, nh, hd))
+        qp = jnp.asarray(np.stack([lens[b] - C + np.arange(C)
+                                   for b in range(B)]), jnp.int32)
+        run = lambda sp, blkv=None: partial_prefill_attention_paged(
+            q, kp, vp, qp, pos, bt, block_kv=blkv, kv_splits=sp)
+        oracle = partial_prefill_ref(q, kd, vd, qp, posd)
+    base = run(1)
+    # splits=1 degenerates exactly: same grid walk, no-op combine
+    assert np.array_equal(np.asarray(run(1, blkv=bs)), np.asarray(base))
+    for sp in (2, 4):
+        o = run(sp)
+        np.testing.assert_allclose(np.asarray(o), np.asarray(base),
+                                   atol=2e-6, rtol=2e-6)
+        np.testing.assert_allclose(np.asarray(o), np.asarray(oracle),
+                                   **TOL[jnp.float32])
 
 
 @pytest.mark.parametrize("B,L,H,P,N,chunk,use_h0", [

@@ -192,6 +192,47 @@ def test_paged_matches_dense_streams(dev, eng_dense, paged_engines,
     assert st_["used_blocks"] == 0               # fully drained at the end
 
 
+@pytest.fixture(scope="module")
+def pallas_engines(pair):
+    """attn_impl='pallas' engines: the dense-cache reference plus paged
+    variants across block size and fused-DMA / split-KV settings."""
+    _, _, llm_cfg, llm_p = pair
+    cfg = llm_cfg.replace(attn_impl="pallas")
+    dense = CloudEngine(cfg, llm_p, max_slots=2, s_max=S_MAX)
+    paged = [
+        # unfused single-pass (block_kv == block_size -> fuse=1)
+        CloudEngine(cfg, llm_p, max_slots=2, s_max=S_MAX,
+                    cache_impl="paged", block_size=16,
+                    paged_block_kv=16, kv_splits=1),
+        # fused multi-block DMA (fuse=8)
+        CloudEngine(cfg, llm_p, max_slots=2, s_max=S_MAX,
+                    cache_impl="paged", block_size=16,
+                    paged_block_kv=128, kv_splits=1),
+        # fused + flash-decode split-KV
+        CloudEngine(cfg, llm_p, max_slots=2, s_max=S_MAX,
+                    cache_impl="paged", block_size=16,
+                    paged_block_kv=64, kv_splits=4),
+    ]
+    return dense, paged
+
+
+@given(st.lists(st.integers(4, 20), min_size=1, max_size=2),
+       st.integers(0, 2))        # which paged pallas engine
+@settings(max_examples=3, deadline=None)
+def test_paged_pallas_streams_match_dense(dev, pallas_engines, lens,
+                                          eng_i):
+    """The paged Pallas kernels (fused DMA, split-KV) are serving-level
+    exact: greedy token streams are byte-identical to the dense-cache
+    pallas engine across prompt lengths and fuse/split settings."""
+    dense, paged = pallas_engines
+    prompts = _prompts(lens, seed=sum(lens) + 11 * len(lens))
+    r_ref = SY.run_synera(dev, dense, prompts, 8, concurrency=1)
+    r_pg = SY.run_synera(dev, paged[eng_i], prompts, 8,
+                         concurrency=len(prompts))
+    assert r_pg.outputs == r_ref.outputs
+    assert r_pg.extras["scheduler"]["cache_impl"] == "paged"
+
+
 def test_forced_preemption_keeps_streams_identical(dev, eng_dense,
                                                    paged_engines):
     """A pool too small for two full streams forces youngest-stream
