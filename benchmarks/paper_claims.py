@@ -73,6 +73,9 @@ def make_engine(llm_cfg, llm_p, slots: int = 2, attn_impl: str | None = None,
                 share_prefix: bool | None = None,
                 swap: bool | None = None,
                 host_swap_blocks: int | None = None,
+                retain_prefix: bool | None = None,
+                retain_blocks: int | None = None,
+                host_dedupe: bool | None = None,
                 paged_block_kv: int | None = None,
                 kv_splits: int | None = None):
     cfg = llm_cfg if attn_impl is None else llm_cfg.replace(
@@ -82,6 +85,9 @@ def make_engine(llm_cfg, llm_p, slots: int = 2, attn_impl: str | None = None,
                        block_size=block_size, pool_blocks=pool_blocks,
                        share_prefix=share_prefix, swap=swap,
                        host_swap_blocks=host_swap_blocks,
+                       retain_prefix=retain_prefix,
+                       retain_blocks=retain_blocks,
+                       host_dedupe=host_dedupe,
                        paged_block_kv=paged_block_kv, kv_splits=kv_splits)
 
 

@@ -39,11 +39,20 @@ Three sweeps:
    prefix, the host swap tier restores it bit-identical and refeeds
    nothing.
 
+5. **Cross-session reuse sweep** (``cross_session_sweep``): N
+   sequential non-overlapping waves of sessions sharing a system
+   prompt, served with retention (cached-free LRU) and with the
+   content-addressed host store.  Outputs are asserted byte-identical
+   to retention-off paged and dense; wave 2+ must feed at least the
+   shared-prefix length fewer prefill tokens, and the swap variant must
+   adopt blocks from the host store.
+
 Usage:
   PYTHONPATH=src:. python -m benchmarks.scale_bench [--fast] \
       [--streams 1,2,4,8] [--concurrency 8,32,128] \
       [--shared-streams 4,8] [--prefix-blocks 4] \
       [--preempt-concurrency 8,32,128] \
+      [--cross-waves 3] [--cross-streams 2] \
       [--out benchmarks/BENCH_scale.json]
 
 Skipped sweeps ('' as the list) keep their previously written section
@@ -378,6 +387,97 @@ def run_preempt_sweep(concurrency=(8, 32, 128), max_new: int = 6,
                 rows=rows)
 
 
+def run_cross_session_sweep(waves: int = 3, streams: int = 2,
+                            max_new: int = 6, slots: int = 4,
+                            block_size: int = 8,
+                            prefix_blocks: int = 4,
+                            suffix_tokens: int = 8) -> dict:
+    """Cross-session prefix reuse (ISSUE 8): N sequential,
+    *non-overlapping* waves of sessions sharing a system prompt.
+
+    Four variants serve every wave on persistent engine state:
+
+    * dense (the oracle) and paged retention-off (each wave re-prefills
+      the full system prompt);
+    * ``retain_prefix``: wave 1's released chain parks on the
+      cached-free LRU and wave 2+ revives it on-device;
+    * ``share_prefix + swap + host_dedupe`` (retention off): wave 1's
+      chain is demoted to the content-addressed host store on release
+      and wave 2+ *adopts* it back by H2D scatter.
+
+    Asserted per wave: outputs byte-identical across all four; from
+    wave 2 on, both caching variants feed at least the shared-prefix
+    length fewer prefill tokens than retention-off, and the swap
+    variant's adoptions come from the host store (zero live sharers).
+    """
+    from benchmarks import paper_claims as PC
+    from benchmarks.prepare import get_pair
+    from repro.core.offload import OffloadPolicy
+    from repro.serving import synergy as SY
+
+    slm_cfg, slm_p, llm_cfg, llm_p, task = get_pair()
+    dev = PC.make_device(slm_cfg, slm_p,
+                         policy=OffloadPolicy(mode="all"),
+                         use_early_exit=False)
+    rng = np.random.default_rng(53)
+    vocab = slm_cfg.vocab
+    prefix_len = prefix_blocks * block_size
+    common = [int(t) for t in rng.integers(1, vocab - 1, prefix_len)]
+
+    mk = lambda **kw: PC.make_engine(llm_cfg, llm_p, slots=slots,
+                                     cache_impl="paged",
+                                     block_size=block_size, **kw)
+    eng_dense = PC.make_engine(llm_cfg, llm_p, slots=slots)
+    eng_off = mk()
+    eng_ret = mk(retain_prefix=True)
+    eng_hsw = mk(share_prefix=True, swap=True, host_dedupe=True)
+
+    rows, adopted_prev = [], 0
+    for w in range(1, waves + 1):
+        prompts = [common + [int(t) for t in rng.integers(
+                       1, vocab - 1, suffix_tokens)]
+                   for _ in range(streams)]
+        r_d = SY.run_synera(dev, eng_dense, prompts, max_new,
+                            concurrency=streams)
+        r_off = SY.run_synera(dev, eng_off, prompts, max_new,
+                              concurrency=streams)
+        r_ret = SY.run_synera(dev, eng_ret, prompts, max_new,
+                              concurrency=streams)
+        r_hsw = SY.run_synera(dev, eng_hsw, prompts, max_new,
+                              concurrency=streams)
+        for name, r in (("paged", r_off), ("retain", r_ret),
+                        ("host_swap", r_hsw)):
+            assert r.outputs == r_d.outputs, \
+                f"{name} wave {w} must not change greedy token streams"
+        fed_off = r_off.extras["scheduler"]["prefill_fed_tokens"]
+        fed_ret = r_ret.extras["scheduler"]["prefill_fed_tokens"]
+        fed_hsw = r_hsw.extras["scheduler"]["prefill_fed_tokens"]
+        adopted = eng_hsw.swap_manager.host_adopted_blocks
+        row = dict(wave=w, streams=streams, prefix_tokens=prefix_len,
+                   prefill_fed_tokens_off=fed_off,
+                   prefill_fed_tokens_retain=fed_ret,
+                   prefill_fed_tokens_host_swap=fed_hsw,
+                   revived_blocks=eng_ret.allocator.revived_blocks,
+                   tail_shared_tokens=(
+                       eng_ret.allocator.tail_shared_tokens),
+                   host_adopted_blocks_wave=adopted - adopted_prev,
+                   host_store_blocks=eng_hsw.swap_manager.host_store_blocks)
+        adopted_prev = adopted
+        if w >= 2:
+            assert fed_off - fed_ret >= prefix_len, row
+            assert fed_off - fed_hsw >= prefix_len, row
+            assert row["host_adopted_blocks_wave"] > 0, row
+        rows.append(row)
+        print(f"wave={w} fed off={fed_off} retain={fed_ret} "
+              f"host_swap={fed_hsw} "
+              f"adopted={row['host_adopted_blocks_wave']} "
+              f"store={row['host_store_blocks']}", flush=True)
+    return dict(waves=waves, streams=streams, max_new=max_new,
+                slots=slots, block_size=block_size,
+                prefix_blocks=prefix_blocks, suffix_tokens=suffix_tokens,
+                rows=rows)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
@@ -393,6 +493,11 @@ def main():
                          "recompute/swap/slo sweep ('' to skip)")
     ap.add_argument("--prefix-blocks", type=int, default=4,
                     help="common system-prefix length in full KV blocks")
+    ap.add_argument("--cross-waves", default="3",
+                    help="sequential non-overlapping waves for the "
+                         "cross-session reuse sweep ('' to skip)")
+    ap.add_argument("--cross-streams", type=int, default=2,
+                    help="sessions per wave in the cross-session sweep")
     ap.add_argument("--slots", type=int, default=8)
     ap.add_argument("--block-size", type=int, default=8)
     ap.add_argument("--out", default="benchmarks/BENCH_scale.json")
@@ -425,6 +530,12 @@ def main():
         res["preempt_sweep"] = run_preempt_sweep(
             concurrency=conc, max_new=4 if args.fast else 6,
             slots=args.slots, block_size=args.block_size)
+    if args.cross_waves:
+        res["cross_session_sweep"] = run_cross_session_sweep(
+            waves=int(args.cross_waves), streams=args.cross_streams,
+            max_new=4 if args.fast else 6,
+            block_size=args.block_size,
+            prefix_blocks=args.prefix_blocks)
     with open(args.out, "w") as f:
         json.dump(res, f, indent=2)
     print(f"wrote {args.out}")

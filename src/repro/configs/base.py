@@ -116,11 +116,21 @@ class ModelConfig:
     # blocks across slots via ref-counted blocks; divergent writes into a
     # shared block fork a private copy (copy-on-write).
     share_prefix: bool = False
+    # Prefix retention (implies share_prefix): released ref-0 prefix
+    # blocks park on a cached-free LRU instead of returning to the free
+    # list, so later sessions with the same prompt prefix re-adopt them
+    # without recompute.  Reclaimed lazily under allocation pressure.
+    retain_prefix: bool = False
+    retain_blocks: int = 0       # cached-free LRU cap in blocks (0 = unbounded)
     # Host swap tier (paged only): preempted streams may be gathered to
     # host memory and scattered back instead of recompute-eviction when
     # the modeled D2H+H2D round trip beats the modeled re-prefill.
     kv_swap: bool = False
     host_swap_blocks: int = 0    # host store cap in blocks (0 = unbounded)
+    # Content-addressed host store (kv_swap + share_prefix): host blocks
+    # are keyed by prefix chain hash, deduped across streams, and new
+    # sessions adopt matching host blocks via H2D scatter at admission.
+    host_dedupe: bool = True
     # Eviction victim selection: "youngest" | "most-blocks" | "slo-aware"
     preempt_policy: str = "youngest"
 

@@ -112,6 +112,22 @@ def main():
                     help="paged cache only: dedupe identical leading "
                          "full prompt blocks across streams (ref-counted "
                          "blocks, copy-on-write on divergent writes)")
+    ap.add_argument("--retain-prefix", action="store_true", default=None,
+                    help="paged cache only (implies --share-prefix): "
+                         "keep released ref-0 prefix blocks on a "
+                         "cached-free LRU so later sessions with the "
+                         "same prompt prefix adopt them without "
+                         "recompute (unset: cfg.retain_prefix)")
+    ap.add_argument("--retain-blocks", type=int, default=None,
+                    help="cached-free LRU capacity in KV blocks "
+                         "(0 = unbounded; unset: cfg.retain_blocks)")
+    ap.add_argument("--no-host-dedupe", action="store_false",
+                    dest="host_dedupe", default=None,
+                    help="disable the content-addressed host store "
+                         "(with --swap + prefix sharing the host tier "
+                         "dedupes identical swapped prefixes and new "
+                         "sessions adopt matching host blocks; unset: "
+                         "cfg.host_dedupe)")
     ap.add_argument("--shared-prefix-tokens", type=int, default=0,
                     help="prepend a common synthetic system prefix of N "
                          "tokens to every request (exercises prefix "
@@ -172,6 +188,9 @@ def main():
                          share_prefix=args.share_prefix,
                          swap=args.swap,
                          host_swap_blocks=args.host_swap_blocks,
+                         retain_prefix=args.retain_prefix,
+                         retain_blocks=args.retain_blocks,
+                         host_dedupe=args.host_dedupe,
                          paged_block_kv=args.block_kv,
                          kv_splits=args.kv_splits)
     concurrency = None if args.concurrency == 0 else args.concurrency
@@ -277,7 +296,15 @@ def main():
                 preempted_refed_tokens=sched["preempted_refed_tokens"],
                 share_prefix=sched["share_prefix"],
                 dedupe_hit_blocks=sched["dedupe_hit_blocks"],
-                cow_copies=sched["cow_copies"])
+                cow_copies=sched["cow_copies"],
+                retain_prefix=sched["retain_prefix"],
+                cached_free_blocks=sched["cached_free_blocks"],
+                revived_blocks=sched["revived_blocks"],
+                reclaimed_blocks=sched["reclaimed_blocks"],
+                tail_shared_tokens=sched["tail_shared_tokens"],
+                host_adopted_blocks=sched["host_adopted_blocks"],
+                admission_swaps=sched["admission_swaps"],
+                prefill_fed_tokens=sched["prefill_fed_tokens"])
     summary.update(
         engine_host_bytes=eng.bytes_to_host,
         engine_specializations=eng.compile_stats["n_specializations"])

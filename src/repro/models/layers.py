@@ -333,6 +333,46 @@ def cache_copy_blocks(stack, src, dst):
     return out
 
 
+def cache_copy_block_rows(stack, src, dst, rows):
+    """Partial-block tail copy within one paged kv stack: for each pair,
+    clone the first ``rows[i]`` token rows of pool block ``src[i]`` into
+    block ``dst[i]`` (k/v/pos together), leaving dst's remaining rows
+    untouched.  This is the sub-block sharing primitive: a new stream
+    whose prompt diverges mid-block adopts the matched leading rows of a
+    registered block *by value* instead of re-computing them (positions
+    copy verbatim — chained prefix blocks share absolute positions).
+
+    ``src``/``dst``: (m,) int32, -1-padded; ``rows``: (m,) int32 (0 for
+    padding).  Padded or empty pairs route the destination out of
+    bounds, which XLA scatter drops.
+    """
+    nb, bs = stack["k"].shape[1], stack["k"].shape[2]
+    s = jnp.clip(src, 0, nb - 1)
+    d_read = jnp.clip(dst, 0, nb - 1)
+    d = jnp.where((dst >= 0) & (rows > 0), dst, nb)
+    mask = jnp.arange(bs)[None, :] < rows[:, None]          # (m, bs)
+    out = dict(stack)
+    for key in ("k", "v", "pos"):
+        src_c = stack[key][:, s]                  # (layers, m, bs, ...)
+        dst_c = stack[key][:, d_read]
+        m = mask.reshape((1,) + mask.shape + (1,) * (src_c.ndim - 3))
+        out[key] = stack[key].at[:, d].set(jnp.where(m, src_c, dst_c))
+    return out
+
+
+def cache_peek_blocks(stack, blocks):
+    """Read-only gather of pool blocks ``blocks[i]`` (k/v/pos) from one
+    paged kv stack.  Unlike :func:`cache_gather_blocks` the pool is NOT
+    invalidated — the content-addressed host tier uses this to demote a
+    block's bytes to host memory while the device copy stays live (a
+    cached-free block keeps serving device-tier hits until reclaimed).
+    ``blocks``: (m,) int32, -1-padded (padded rows gather clamped junk
+    the caller ignores)."""
+    nb = stack["k"].shape[1]
+    s = jnp.clip(blocks, 0, nb - 1)
+    return {key: stack[key][:, s] for key in ("k", "v", "pos")}
+
+
 def cache_gather_blocks(stack, blocks):
     """Gather pool blocks ``blocks[i]`` out of one paged kv stack (the
     swap-out primitive: the host swap tier keeps the gathered k/v/pos

@@ -267,6 +267,42 @@ def copy_cache_blocks(cache, src, dst):
     return walk(cache)
 
 
+def copy_cache_block_rows(cache, src, dst, rows):
+    """Partial-block tail copy over a whole paged cache: clone the first
+    ``rows[i]`` token rows of pool block ``src[i]`` into ``dst[i]`` in
+    every paged kv stack (the sub-block analogue of
+    :func:`copy_cache_blocks`).  One jitted, donated dispatch in the
+    engine."""
+
+    def walk(c):
+        if "block_tables" in c:
+            return L.cache_copy_block_rows(c, src, dst, rows)
+        return {k: walk(v) if isinstance(v, dict) else v
+                for k, v in c.items()}
+
+    return walk(cache)
+
+
+def peek_cache_blocks(cache, blocks):
+    """Read-only gather over a whole paged cache: pull pool blocks
+    ``blocks[i]`` (k/v/pos) out of every paged kv stack WITHOUT
+    invalidating them.  Returns the same payload pytree shape as
+    :func:`swap_out_blocks` (so :func:`swap_in_blocks` can restore it),
+    but the cache is untouched — jitted without donation.  The
+    content-addressed host tier demotes still-valid blocks with this."""
+
+    def walk(c):
+        if "block_tables" in c:
+            return L.cache_peek_blocks(c, blocks)
+        out = {}
+        for k, v in c.items():
+            if isinstance(v, dict):
+                out[k] = walk(v)
+        return out
+
+    return walk(cache)
+
+
 def swap_out_blocks(cache, blocks):
     """Host-swap gather over a whole paged cache: pull pool blocks
     ``blocks[i]`` (k/v/pos) out of every paged kv stack and invalidate

@@ -79,8 +79,17 @@ class BlockAllocator:
     copy first (copy-on-write — ``prepare_writes`` does the
     bookkeeping, the engine clones pool content).  A block returns to
     the free list only when its refcount reaches zero, at which point it
-    also leaves the index (no cross-residency prefix persistence — a
-    ROADMAP follow-on).
+    also leaves the index.
+
+    With ``retain_prefix=True`` (implies sharing) a fully-written,
+    registered prefix block whose refcount hits zero does NOT free:
+    it parks on the cached-free LRU (``_cached``, insertion-ordered —
+    oldest first) and stays in the index with its pool content intact,
+    so a recurring prompt hits across *non-overlapping* sessions.
+    Allocation prefers the truly-free list and reclaims LRU cached
+    blocks only under pressure (``_take_block``: unregister + queue for
+    invalidation — the engine flushes ``take_reclaimed`` before the
+    next write).  ``retain_blocks`` caps the LRU (0 = unbounded).
 
     Index entries are exact, not trust-the-hash: each registered block
     stores ``(prev_chain_hash, its token tuple)`` and a match verifies
@@ -89,11 +98,14 @@ class BlockAllocator:
     """
 
     def __init__(self, n_blocks: int, block_size: int, max_slots: int,
-                 max_blocks_per_slot: int, share_prefix: bool = False):
+                 max_blocks_per_slot: int, share_prefix: bool = False,
+                 retain_prefix: bool = False, retain_blocks: int = 0):
         self.n_blocks = n_blocks
         self.block_size = block_size
         self.max_blocks_per_slot = max_blocks_per_slot
-        self.share_prefix = share_prefix
+        self.share_prefix = share_prefix or retain_prefix
+        self.retain_prefix = retain_prefix
+        self.retain_blocks = int(retain_blocks)
         self._free: deque[int] = deque(range(n_blocks))
         self.table = np.full((max_slots, max_blocks_per_slot), -1, np.int32)
         self.n_blocks_of = np.zeros(max_slots, np.int64)
@@ -115,18 +127,36 @@ class BlockAllocator:
         # write: that first write realizes the registered content and
         # must neither fork nor unregister
         self._fill: set[int] = set()
+        # cached-free LRU (retain_prefix): registered blocks at ref 0
+        # whose content stays valid in the pool.  Insertion-ordered dict
+        # used as an ordered set — first key is the LRU victim.
+        self._cached: dict[int, None] = {}
+        # reclaimed cached blocks whose stale pool positions the engine
+        # must invalidate before the next write (see take_reclaimed)
+        self._reclaim_pending: list[int] = []
         # telemetry
         self.dedupe_hit_blocks = 0   # cumulative blocks adopted via index
         self.cow_copies = 0          # cumulative copy-on-write forks
         self.shadow_promotions = 0   # duplicates promoted to primary
+        self.revived_blocks = 0      # cached-free blocks re-adopted live
+        self.reclaimed_blocks = 0    # cached-free blocks reclaimed (LRU)
+        self.tail_shared_tokens = 0  # partial-block tail rows copied
 
     @property
     def free_blocks(self) -> int:
         return len(self._free)
 
     @property
+    def cached_blocks(self) -> int:
+        """Cached-free blocks: refcount 0 but still registered (their
+        pool content is valid and adoptable until reclaimed)."""
+        return len(self._cached)
+
+    @property
     def used_blocks(self) -> int:
-        return self.n_blocks - len(self._free)
+        """Blocks live in some slot's table (cached-free blocks are not
+        used — they are reclaimable supply)."""
+        return self.n_blocks - len(self._free) - len(self._cached)
 
     @property
     def shared_blocks(self) -> int:
@@ -147,38 +177,109 @@ class BlockAllocator:
         """Additional blocks ``slot`` needs to cover ``seq_len`` tokens."""
         return max(0, self.blocks_for(seq_len) - int(self.n_blocks_of[slot]))
 
+    def allocatable_blocks(self, reserved=()) -> int:
+        """Blocks an allocation can draw on: the truly-free list plus
+        cached-free (LRU-reclaimable) blocks, minus any cached blocks
+        the caller is about to adopt (``reserved`` — an adopted cached
+        block is revived, not reclaimed, so it cannot double as
+        supply)."""
+        held = sum(1 for b in reserved if b in self._cached)
+        return len(self._free) + len(self._cached) - held
+
+    def _take_block(self):
+        """Pop a writable block: truly-free first, else reclaim the
+        LRU cached-free block (unregister + queue its stale positions
+        for invalidation).  Returns None when both tiers are dry."""
+        if self._free:
+            return self._free.popleft()
+        if self._cached:
+            b = next(iter(self._cached))
+            del self._cached[b]
+            self._unregister(b)
+            self._reclaim_pending.append(b)
+            self.reclaimed_blocks += 1
+            return b
+        return None
+
+    def take_reclaimed(self) -> list[int]:
+        """Drain the ids of blocks reclaimed from the cached-free LRU
+        since the last drain.  The engine MUST invalidate their pool
+        positions before the next cache write dispatch — their content
+        was valid (that is the point of retention) and would otherwise
+        read as live rows through the new owner's table."""
+        out, self._reclaim_pending = self._reclaim_pending, []
+        return out
+
+    def map_block(self, slot: int, bid: int) -> None:
+        """Append an existing block to ``slot``'s table (ref++),
+        reviving it from the cached-free LRU if parked there."""
+        if bid in self._cached:
+            del self._cached[bid]
+            self.revived_blocks += 1
+        j = int(self.n_blocks_of[slot])
+        self.table[slot, j] = bid
+        self.ref[bid] += 1
+        self.n_blocks_of[slot] = j + 1
+        self.peak_used = max(self.peak_used, self.used_blocks)
+
+    def append_fresh(self, slot: int):
+        """Allocate one writable block and append it to ``slot``'s
+        table (ref=1).  Returns the block id, or None if the pool (both
+        tiers) is dry."""
+        b = self._take_block()
+        if b is None:
+            return None
+        j = int(self.n_blocks_of[slot])
+        self.table[slot, j] = b
+        self.ref[b] = 1
+        self.n_blocks_of[slot] = j + 1
+        self.peak_used = max(self.peak_used, self.used_blocks)
+        return b
+
     def extend(self, slot: int, seq_len: int) -> bool:
         """Grow ``slot`` to cover ``seq_len`` tokens.  All-or-nothing:
         returns False (no allocation) if the pool cannot supply it."""
         need = self.needed(slot, seq_len)
-        if need > len(self._free):
+        if need > self.allocatable_blocks():
             return False
-        have = int(self.n_blocks_of[slot])
-        for j in range(have, have + need):
-            b = self._free.popleft()
-            self.table[slot, j] = b
-            self.ref[b] = 1
-        self.n_blocks_of[slot] = have + need
-        self.peak_used = max(self.peak_used, self.used_blocks)
+        for _ in range(need):
+            self.append_fresh(slot)
         return True
 
     def release(self, slot: int) -> np.ndarray:
         """Drop ``slot``'s reference on all its blocks.  Blocks whose
         refcount hits zero return to the pool (and leave the prefix
-        index); blocks still mapped by a sibling stay live and MUST NOT
-        be invalidated.  Returns the truly freed block ids (the engine
-        invalidates their pool positions)."""
+        index) — except, under ``retain_prefix``, fully-realized
+        registered blocks, which park on the cached-free LRU with index
+        entry and pool content intact.  Blocks still mapped by a
+        sibling stay live and MUST NOT be invalidated.  Returns the
+        truly freed block ids (the engine invalidates their pool
+        positions); cached blocks are deliberately NOT in that list."""
         n = int(self.n_blocks_of[slot])
         freed = []
         for j in range(n):
             b = int(self.table[slot, j])
             self.ref[b] -= 1
             if self.ref[b] == 0:
-                self._free.append(b)
-                self._unregister(b)
-                freed.append(b)
+                if (self.retain_prefix and b in self._rindex
+                        and b not in self._fill):
+                    # cross-session retention: keep the chain entry and
+                    # the pool bytes; MRU position in the LRU order
+                    self._cached[b] = None
+                else:
+                    self._free.append(b)
+                    self._unregister(b)
+                    freed.append(b)
         self.table[slot, :] = -1
         self.n_blocks_of[slot] = 0
+        # enforce the retention cap, oldest first
+        cap = self.retain_blocks
+        while cap and len(self._cached) > cap:
+            b = next(iter(self._cached))
+            del self._cached[b]
+            self._unregister(b)
+            self._free.append(b)
+            freed.append(b)
         return np.asarray(freed, np.int32)
 
     # -- prefix sharing / copy-on-write --------------------------------
@@ -213,14 +314,74 @@ class BlockAllocator:
 
     def adopt_prefix(self, slot: int, bids: list[int]) -> None:
         """Map matched prefix blocks into an empty slot's table (ref++):
-        the dedupe hit — no allocation, no feed, just an indirection."""
+        the dedupe hit — no allocation, no feed, just an indirection.
+        Cached-free blocks in ``bids`` are revived (the cross-session
+        hit: the prior owner is long gone, the bytes are still here)."""
         assert int(self.n_blocks_of[slot]) == 0, \
             "prefix adoption requires a freshly admitted (empty) slot"
-        for j, b in enumerate(bids):
-            self.table[slot, j] = b
-            self.ref[b] += 1
-        self.n_blocks_of[slot] = len(bids)
+        for b in bids:
+            self.map_block(slot, b)
         self.dedupe_hit_blocks += len(bids)
+
+    def chain_of(self, bid: int):
+        """Registration record of a block: ``(chain_hash, prev_hash,
+        token_tuple)``, or None if unregistered."""
+        h = self._rindex.get(bid)
+        if h is None:
+            return None
+        prev, blk = self._contents[bid]
+        return h, prev, blk
+
+    def register_block(self, bid: int, h: int, prev: int, blk: tuple,
+                       fill: bool = False) -> None:
+        """Publish one block under chain hash ``h`` with exact contents
+        ``(prev, blk)``.  ``fill=False`` registers it *realized* (its
+        pool content already holds the promised rows — e.g. scattered
+        from the host store), so a later sole-owned divergent write
+        correctly unregisters instead of skipping the fork."""
+        if bid in self._rindex:
+            return
+        self._rindex[bid] = h
+        self._contents[bid] = (prev, blk)
+        if fill:
+            self._fill.add(bid)
+        if h not in self._index:
+            self._index[h] = bid
+        else:
+            self._shadow.setdefault(h, []).append(bid)
+
+    def match_tail(self, tokens, n_matched: int):
+        """Partial-block tail probe: after ``n_matched`` fully matched
+        blocks, find a registered block whose content extends the same
+        chain and shares the longest row prefix with the next (partial)
+        block of ``tokens``.  Returns ``(bid, rows)`` with rows >= 1, or
+        None.  Capped at ``len(tokens) - 1`` total so the prefill still
+        feeds at least the last token; fill-pending candidates are
+        excluded (their pool rows are not written yet, so there is
+        nothing to copy)."""
+        if not self.share_prefix or len(tokens) > self.s_max:
+            return None
+        bs = self.block_size
+        lo = n_matched * bs
+        cap = min(len(tokens) - 1 - lo, bs)
+        if cap <= 0 or n_matched >= self.max_blocks_per_slot:
+            return None
+        h = _CHAIN_ROOT
+        for ch, _prev, _blk in self._chain(tokens, n_matched):
+            h = ch
+        want = tuple(int(t) for t in tokens[lo:lo + cap])
+        best = None
+        for bid, (prev, blk) in self._contents.items():
+            if prev != h or bid in self._fill:
+                continue
+            r = 0
+            while r < cap and blk[r] == want[r]:
+                r += 1
+            if r > 0 and (best is None or r > best[1]):
+                best = (bid, r)
+                if r == cap:
+                    break
+        return best
 
     def register_prefix(self, slot: int, tokens) -> None:
         """Publish ``slot``'s full prompt blocks in the prefix index.
@@ -237,20 +398,14 @@ class BlockAllocator:
             bid = int(self.table[slot, j])
             if bid < 0 or bid in self._rindex:
                 continue                 # adopted / already registered
-            self._rindex[bid] = h
-            self._contents[bid] = (prev, blk)
-            self._fill.add(bid)
-            if h not in self._index:
-                self._index[h] = bid
-            else:
-                # canonical-chain registration: the chain hash already
-                # has a primary (e.g. this prompt's last full block sat
-                # past the len-1 match cap, so a content duplicate was
-                # allocated).  Recording the duplicate under the SAME
-                # canonical hash lets _unregister promote it when the
-                # primary dies — without it, a content-identical prefix
-                # would miss a share that still physically exists.
-                self._shadow.setdefault(h, []).append(bid)
+            # canonical-chain registration: when the chain hash already
+            # has a primary (e.g. this prompt's last full block sat
+            # past the len-1 match cap, so a content duplicate was
+            # allocated), register_block records the duplicate under the
+            # SAME canonical hash so _unregister can promote it when the
+            # primary dies — without it, a content-identical prefix
+            # would miss a share that still physically exists.
+            self.register_block(bid, h, prev, blk, fill=True)
 
     def _unregister(self, bid: int) -> None:
         h = self._rindex.pop(bid, None)
@@ -308,11 +463,11 @@ class BlockAllocator:
                 self._fill.discard(bid)
                 continue
             if self.ref[bid] > 1:
-                if not self._free:
+                dst = self._take_block()
+                if dst is None:
                     raise BlockPoolExhausted(
                         f"slot {slot} must copy-on-write fork shared "
                         f"block {bid} but the pool is dry")
-                dst = self._free.popleft()
                 self.ref[bid] -= 1
                 self.ref[dst] = 1
                 self.table[slot, i] = dst
@@ -447,6 +602,9 @@ class CloudEngine:
                  cache_impl: str | None = None, block_size: int | None = None,
                  pool_blocks: int | None = None,
                  share_prefix: bool | None = None,
+                 retain_prefix: bool | None = None,
+                 retain_blocks: int | None = None,
+                 host_dedupe: bool | None = None,
                  swap: bool | None = None,
                  host_swap_blocks: int | None = None,
                  paged_block_kv: int | None = None,
@@ -484,12 +642,17 @@ class CloudEngine:
             max_bps = -(-s_max // self.block_size)
             nb = (pool_blocks if pool_blocks is not None
                   else max_slots * max_bps)
+            retain = bool(retain_prefix if retain_prefix is not None
+                          else getattr(cfg, "retain_prefix", False))
             self.share_prefix = bool(
                 share_prefix if share_prefix is not None
-                else getattr(cfg, "share_prefix", False))
-            self.allocator = BlockAllocator(nb, self.block_size, max_slots,
-                                            max_bps,
-                                            share_prefix=self.share_prefix)
+                else getattr(cfg, "share_prefix", False)) or retain
+            self.allocator = BlockAllocator(
+                nb, self.block_size, max_slots, max_bps,
+                share_prefix=self.share_prefix,
+                retain_prefix=retain,
+                retain_blocks=(retain_blocks if retain_blocks is not None
+                               else getattr(cfg, "retain_blocks", 0)))
             self.cache = M.init_cache(cfg, max_slots, s_max,
                                       cache_impl="paged",
                                       block_size=self.block_size,
@@ -498,14 +661,19 @@ class CloudEngine:
                                          donate_argnums=0)
             self._copy_blocks = jax.jit(M.copy_cache_blocks,
                                         donate_argnums=0)
+            self._copy_rows = jax.jit(M.copy_cache_block_rows,
+                                      donate_argnums=0)
             self._tables_dirty = False
             if want_swap:
                 # deferred import: swap.py imports this module
                 from repro.serving.swap import HostSwapManager
                 hb = (host_swap_blocks if host_swap_blocks is not None
                       else getattr(cfg, "host_swap_blocks", 0))
+                dedupe = bool(host_dedupe if host_dedupe is not None
+                              else getattr(cfg, "host_dedupe", True))
                 self.swap_manager = HostSwapManager(self,
-                                                    max_host_blocks=hb)
+                                                    max_host_blocks=hb,
+                                                    host_dedupe=dedupe)
         else:
             self.cache = M.init_cache(cfg, max_slots, s_max)
         self._step = jax.jit(
@@ -556,19 +724,49 @@ class CloudEngine:
         positions are invalidated (a freed block must never read as
         valid through a future owner's table)."""
         if self.allocator is not None:
+            if (self.swap_manager is not None
+                    and not self.allocator.retain_prefix):
+                # content-addressed demotion: without device retention,
+                # the last sharer's exit would lose a recurring prefix;
+                # park its sole-owned registered blocks in the host
+                # store so a future session can adopt them (H2D scatter
+                # instead of re-prefill)
+                self.swap_manager.demote_slot(slot)
             freed = self.allocator.release(slot)
-            if len(freed):
-                pad = np.full(self.allocator.max_blocks_per_slot, -1,
-                              np.int32)
-                pad[:len(freed)] = freed
-                self.cache = _call_donated(self._reset_blocks, self.cache,
-                                           jnp.asarray(pad))
+            self._invalidate_blocks(freed)
             self._tables_dirty = True
             self._sync_tables()
             return
         self.cache = _call_donated(self._reset, self.cache, jnp.int32(slot))
 
     # -- paged block management ----------------------------------------
+    def _invalidate_blocks(self, bids):
+        """Invalidate pool positions of ``bids`` in fixed-size chunked,
+        jitted, donated dispatches (a freed or reclaimed block must
+        never read as valid through a future owner's table)."""
+        bids = list(bids)
+        if not bids:
+            return
+        W = self.allocator.max_blocks_per_slot
+        for off in range(0, len(bids), W):
+            grp = bids[off:off + W]
+            pad = np.full(W, -1, np.int32)
+            pad[:len(grp)] = grp
+            self.cache = _call_donated(self._reset_blocks, self.cache,
+                                       jnp.asarray(pad))
+
+    def _flush_reclaims(self):
+        """Invalidate positions of blocks reclaimed from the cached-free
+        LRU since the last flush.  A reclaimed block's content was fully
+        valid (that is what retention preserves), so unlike the ordinary
+        free path its stale rows WOULD read as live through the new
+        owner's table; this must run before any dispatch that writes or
+        reads the reclaimed blocks — and before ``_apply_forks``
+        (wipe-then-copy keeps a fork destination's content; the reverse
+        order would destroy it)."""
+        if self.allocator is not None:
+            self._invalidate_blocks(self.allocator.take_reclaimed())
+
     def _sync_tables(self):
         """Push the allocator's block-table mirror into every
         ``block_tables`` cache leaf (host-side leaf swap, no jit)."""
@@ -607,6 +805,7 @@ class CloudEngine:
                         f" more KV blocks; pool has "
                         f"{self.allocator.free_blocks} free")
                 self._tables_dirty = True
+        self._flush_reclaims()
         if forks:
             self._tables_dirty = True
             self._apply_forks(forks)
@@ -645,13 +844,19 @@ class CloudEngine:
         sub-chunk's rows attend over it."""
         a = self.allocator
         assert a is not None, "alloc_prompt requires a paged engine"
-        shared = 0
-        if bids is None:
+        if bids is None or any(b not in a._rindex for b in bids):
+            # re-probe: a block the admission probe matched may have
+            # been reclaimed from the cached-free LRU in the interim
             bids = a.match_prefix(tokens)
         if bids:
             a.adopt_prefix(slot, bids)
-            shared = len(bids) * a.block_size
             self._tables_dirty = True
+        # continue the chain-hash walk into the content-addressed host
+        # store: blocks a finished (or swapped) stream demoted to host
+        # memory are adopted by H2D scatter instead of re-prefill
+        host = []
+        if self.swap_manager is not None:
+            host = self.swap_manager.host_match_chain(tokens, len(bids))
         L = min(len(tokens), self.s_max)
         if a.needed(slot, L):
             if not a.extend(slot, L):
@@ -661,8 +866,50 @@ class CloudEngine:
                     f"pool has {a.free_blocks} free — admission should "
                     f"have deferred this prefill")
             self._tables_dirty = True
+        # reclaimed cached blocks must be wiped before the host scatter
+        # or tail copy writes (and before the prompt feed reads them)
+        self._flush_reclaims()
+        if host:
+            self.swap_manager.adopt_from_host(slot, len(bids), host)
+        n_adopted = len(bids) + len(host)
+        shared = n_adopted * a.block_size
+        # partial-block tail: the longest matching row prefix of a
+        # registered block is copied by value into the first divergent
+        # block, so a prefix ending mid-block stops re-computing there
+        tail = a.match_tail(tokens, n_adopted)
+        if tail is not None:
+            src_bid, rows = tail
+            dst_bid = int(a.table[slot, n_adopted])
+            W = a.max_blocks_per_slot
+            src = np.full(W, -1, np.int32)
+            dst = np.full(W, -1, np.int32)
+            nrows = np.zeros(W, np.int32)
+            src[0], dst[0], nrows[0] = src_bid, dst_bid, rows
+            self.cache = _call_donated(self._copy_rows, self.cache,
+                                       jnp.asarray(src), jnp.asarray(dst),
+                                       jnp.asarray(nrows))
+            a.tail_shared_tokens += rows
+            shared += rows
         a.register_prefix(slot, tokens)
         return shared
+
+    def readopt_prefix(self, slot: int, tokens) -> int:
+        """Re-match a restarted (preempted/rewound) stream's leading
+        blocks against the prefix index and adopt them into its freshly
+        emptied slot — the restart analogue of ``alloc_prompt``'s
+        dedupe.  The refeed then starts at the first unmatched token.
+        Returns the number of re-adopted tokens (0 for dense engines or
+        with sharing off)."""
+        a = self.allocator
+        if a is None or not a.share_prefix:
+            return 0
+        bids = a.match_prefix(tokens)
+        if not bids:
+            return 0
+        a.adopt_prefix(slot, bids)
+        self._tables_dirty = True
+        self._sync_tables()
+        return len(bids) * a.block_size
 
     def kv_cache_bytes(self) -> int:
         """Total bytes backing the KV cache (dense buffers or the whole
@@ -696,27 +943,45 @@ class CloudEngine:
         if self.allocator is None:
             return dict(cache_impl="dense", kv_cache_bytes=total,
                         kv_bytes_in_use=total, kv_bytes_peak=total,
-                        free_blocks=0, used_blocks=0, peak_used_blocks=0,
-                        n_blocks=0, block_size=0, share_prefix=False,
+                        free_blocks=0, cached_free_blocks=0, used_blocks=0,
+                        peak_used_blocks=0, n_blocks=0, block_size=0,
+                        share_prefix=False, retain_prefix=False,
                         shared_blocks=0, dedupe_hit_blocks=0, cow_copies=0,
+                        revived_blocks=0, reclaimed_blocks=0,
+                        tail_shared_tokens=0,
                         swap=False, swapped_blocks=0, swap_out_bytes=0,
-                        swap_in_bytes=0)
+                        swap_in_bytes=0, host_store_blocks=0,
+                        host_lru_blocks=0, host_dedupe_hits=0,
+                        host_adopted_blocks=0, adopt_in_bytes=0,
+                        demoted_blocks=0)
         a = self.allocator
         bb = self.block_bytes()
         sw = self.swap_manager
         return dict(cache_impl="paged", kv_cache_bytes=total,
                     kv_bytes_in_use=a.used_blocks * bb,
                     kv_bytes_peak=a.peak_used * bb,
-                    free_blocks=a.free_blocks, used_blocks=a.used_blocks,
+                    free_blocks=a.free_blocks,
+                    cached_free_blocks=a.cached_blocks,
+                    used_blocks=a.used_blocks,
                     peak_used_blocks=a.peak_used, n_blocks=a.n_blocks,
                     block_size=a.block_size, share_prefix=a.share_prefix,
+                    retain_prefix=a.retain_prefix,
                     shared_blocks=a.shared_blocks,
                     dedupe_hit_blocks=a.dedupe_hit_blocks,
                     cow_copies=a.cow_copies,
+                    revived_blocks=a.revived_blocks,
+                    reclaimed_blocks=a.reclaimed_blocks,
+                    tail_shared_tokens=a.tail_shared_tokens,
                     swap=sw is not None,
                     swapped_blocks=sw.swapped_blocks if sw else 0,
                     swap_out_bytes=sw.swap_out_bytes if sw else 0,
-                    swap_in_bytes=sw.swap_in_bytes if sw else 0)
+                    swap_in_bytes=sw.swap_in_bytes if sw else 0,
+                    host_store_blocks=sw.host_store_blocks if sw else 0,
+                    host_lru_blocks=sw.host_lru_blocks if sw else 0,
+                    host_dedupe_hits=sw.host_dedupe_hits if sw else 0,
+                    host_adopted_blocks=sw.host_adopted_blocks if sw else 0,
+                    adopt_in_bytes=sw.adopt_in_bytes if sw else 0,
+                    demoted_blocks=sw.demoted_blocks if sw else 0)
 
     # -- bucketing ------------------------------------------------------
     def _bucket_of(self, n: int) -> int:

@@ -260,16 +260,24 @@ class Gateway:
                 await asyncio.sleep(0.1)
 
     async def _client(self, reader, writer) -> None:
+        # keep-alive loop: one connection carries exchanges until the
+        # client closes, asks to close, or an exchange requires it
+        # (SSE streams, disconnects, framing errors)
         try:
-            try:
-                hreq = await H.read_request(reader)
-            except (H.BadRequest, asyncio.IncompleteReadError) as e:
-                writer.write(H.response(400, json.dumps(
-                    {"error": {"message": str(e)}}).encode()))
-                return
-            if hreq is None:
-                return
-            await self._route(hreq, reader, writer)
+            first = b""
+            while not self._stop.is_set():
+                try:
+                    hreq = await H.read_request(reader, first=first)
+                except (H.BadRequest, asyncio.IncompleteReadError) as e:
+                    writer.write(H.response(400, json.dumps(
+                        {"error": {"message": str(e)}}).encode()))
+                    return
+                if hreq is None:
+                    return
+                keep = H.wants_keep_alive(hreq.headers)
+                first = await self._route(hreq, reader, writer, keep)
+                if first is None:
+                    return
         except (ConnectionResetError, BrokenPipeError):
             pass
         finally:
@@ -280,22 +288,29 @@ class Gateway:
                 pass
             writer.close()
 
-    async def _route(self, hreq: H.HTTPRequest, reader, writer) -> None:
+    async def _route(self, hreq: H.HTTPRequest, reader, writer,
+                     keep: bool) -> bytes | None:
+        """Handle one exchange.  Returns pushback bytes for the next
+        ``read_request`` (b"" normally) to keep the connection open, or
+        None to close it."""
         if hreq.path == "/v1/chat/completions":
             if hreq.method != "POST":
-                writer.write(H.response(405, b'{"error":"POST only"}'))
-                return
-            await self._chat(hreq, reader, writer)
+                writer.write(H.response(405, b'{"error":"POST only"}',
+                                        keep_alive=keep))
+            else:
+                nxt = await self._chat(hreq, reader, writer, keep)
+                await writer.drain()
+                return nxt
         elif hreq.path == "/v1/models":
             body = json.dumps({"object": "list", "data": [
                 {"id": self.cfg.model_name, "object": "model",
                  "owned_by": "synera-repro"}]}).encode()
-            writer.write(H.response(200, body))
+            writer.write(H.response(200, body, keep_alive=keep))
         elif hreq.path == "/healthz":
             with self._lock:
                 body = json.dumps({"status": "ok", "active": self._n_open,
                                    "queued": self._n_queued}).encode()
-            writer.write(H.response(200, body))
+            writer.write(H.response(200, body, keep_alive=keep))
         elif hreq.path == "/metrics":
             loop = asyncio.get_running_loop()
             fut = loop.create_future()
@@ -308,17 +323,22 @@ class Gateway:
                 stats["gateway_active"] = self._n_open
                 stats["gateway_queued"] = self._n_queued
             if hreq.query.get("format") == "json":
-                writer.write(H.response(200, json.dumps(stats).encode()))
+                writer.write(H.response(200, json.dumps(stats).encode(),
+                                        keep_alive=keep))
             else:
                 writer.write(H.response(
                     200, P.metrics_text(stats).encode(),
-                    content_type="text/plain; version=0.0.4"))
+                    content_type="text/plain; version=0.0.4",
+                    keep_alive=keep))
         else:
-            writer.write(H.response(404, b'{"error":"not found"}'))
+            writer.write(H.response(404, b'{"error":"not found"}',
+                                    keep_alive=keep))
         await writer.drain()
+        return b"" if keep else None
 
     # -- chat completions ----------------------------------------------
-    async def _chat(self, hreq: H.HTTPRequest, reader, writer) -> None:
+    async def _chat(self, hreq: H.HTTPRequest, reader, writer,
+                    keep: bool) -> bytes | None:
         try:
             req = P.parse_chat_request(
                 hreq.body, default_model=self.cfg.model_name,
@@ -327,9 +347,10 @@ class Gateway:
         except P.ProtocolError as e:
             writer.write(H.response(400, json.dumps(
                 {"error": {"message": str(e),
-                           "type": "invalid_request_error"}}).encode()))
+                           "type": "invalid_request_error"}}).encode(),
+                keep_alive=keep))
             await writer.drain()
-            return
+            return b"" if keep else None
         # admission: the system holds at most max_active running plus
         # queue_cap waiting requests.  Bounding the *total* (not just
         # the wait queue) keeps a cold burst from queueing unboundedly
@@ -348,22 +369,46 @@ class Gateway:
                                f"active streams and a full wait queue "
                                f"({self.cfg.queue_cap}); retry later",
                     "type": "rate_limit_error"}}).encode(),
+                keep_alive=keep,
                 extra_headers={"Retry-After": str(self.cfg.retry_after_s)}))
             await writer.drain()
-            return
+            return b"" if keep else None
         st = _Stream(req, asyncio.get_running_loop())
         self._submit(("open", st))
-        # any bytes (or EOF) after the request = the client went away
+        # per-stream disconnect watch: any bytes (or EOF) while this
+        # stream is in flight = the client went away (no pipelining)
         eof_task = asyncio.ensure_future(reader.read(1))
         try:
             if req.stream:
                 await self._chat_stream(st, writer, eof_task)
-            else:
-                await self._chat_full(st, writer, eof_task)
+                return None        # SSE body ends at EOF: always close
+            done = await self._chat_full(st, writer, eof_task, keep)
+            if done and keep:
+                return await self._harvest(eof_task)
+            return None
         except (ConnectionResetError, BrokenPipeError):
             self._disconnect(st)
+            return None
         finally:
-            eof_task.cancel()
+            if not eof_task.done():
+                eof_task.cancel()
+
+    @staticmethod
+    async def _harvest(eof_task) -> bytes | None:
+        """Retire the disconnect watcher after a completed keep-alive
+        exchange.  If it already consumed a byte, that byte is the start
+        of the next request line (push it back); a completed empty read
+        means the client hit EOF (close).  Must *await* the cancelled
+        task: until cancellation lands, the watcher still owns the
+        stream reader and the next ``readline`` would race it."""
+        eof_task.cancel()
+        try:
+            data = await eof_task
+        except asyncio.CancelledError:
+            return b""                 # watcher retired without reading
+        except Exception:
+            return None
+        return data if data else None  # byte = next request; b"" = EOF
 
     async def _next_event(self, st: _Stream, eof_task):
         """Next queue item, or None if the client disconnected first."""
@@ -419,7 +464,10 @@ class Gateway:
                 await writer.drain()
                 return
 
-    async def _chat_full(self, st: _Stream, writer, eof_task) -> None:
+    async def _chat_full(self, st: _Stream, writer, eof_task,
+                         keep: bool) -> bool:
+        """Non-streamed completion.  Returns True when the exchange
+        finished cleanly and the connection may be kept alive."""
         req = st.req
         cid, created = P.new_completion_id(), int(time.time())
         toks: list[int] = []
@@ -427,7 +475,7 @@ class Gateway:
             ev = await self._next_event(st, eof_task)
             if ev is None:
                 self._disconnect(st)
-                return
+                return False
             kind, payload = ev
             if kind == "tok":
                 toks += payload
@@ -437,11 +485,12 @@ class Gateway:
                 body = P.completion_dict(
                     cid, created, req.model, P.detok(toks).rstrip(),
                     finish, P.usage_dict(len(req.prompt), len(toks)))
-                writer.write(H.response(200, json.dumps(body).encode()))
+                writer.write(H.response(200, json.dumps(body).encode(),
+                                        keep_alive=keep))
                 await writer.drain()
-                return
+                return True
             else:  # "err"
                 writer.write(H.response(500, json.dumps(
                     {"error": {"message": str(payload)}}).encode()))
                 await writer.drain()
-                return
+                return False

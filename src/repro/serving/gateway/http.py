@@ -7,9 +7,12 @@ deliberately tiny — exactly what the gateway and its bench client need:
 * request parsing (request line, headers, Content-Length body; bodies
   are capped, chunked request bodies are not accepted),
 * fixed responses and SSE streaming responses,
-* ``Connection: close`` semantics (one exchange per connection — the
-  load generator opens a connection per request, which also gives the
-  disconnect-detection path constant exercise).
+* HTTP/1.1 keep-alive: fixed responses carry ``Connection: keep-alive``
+  unless the client asked to close, so one connection can carry many
+  exchanges (pipelining is not supported — bytes arriving while a chat
+  stream is in flight are treated as a client disconnect).  SSE
+  streaming responses always close: the stream *is* the response body,
+  so its end is signalled by EOF.
 """
 from __future__ import annotations
 
@@ -37,11 +40,13 @@ class BadRequest(ValueError):
     pass
 
 
-async def read_request(reader) -> HTTPRequest | None:
+async def read_request(reader, first: bytes = b"") -> HTTPRequest | None:
     """Parse one HTTP/1.1 request; None on immediate EOF (client went
     away between connect and send).  Raises BadRequest on malformed or
-    oversized input."""
-    line = await reader.readline()
+    oversized input.  ``first`` is prepended to the request line — the
+    keep-alive loop uses it to push back bytes its disconnect watcher
+    consumed between exchanges."""
+    line = first + await reader.readline()
     if not line:
         return None
     try:
@@ -74,14 +79,21 @@ async def read_request(reader) -> HTTPRequest | None:
 
 def response(status: int, body: bytes, *,
              content_type: str = "application/json",
+             keep_alive: bool = False,
              extra_headers: dict | None = None) -> bytes:
     head = [f"HTTP/1.1 {status} {REASONS.get(status, 'Unknown')}",
             f"Content-Type: {content_type}",
             f"Content-Length: {len(body)}",
-            "Connection: close"]
+            f"Connection: {'keep-alive' if keep_alive else 'close'}"]
     for k, v in (extra_headers or {}).items():
         head.append(f"{k}: {v}")
     return ("\r\n".join(head) + "\r\n\r\n").encode() + body
+
+
+def wants_keep_alive(headers: dict) -> bool:
+    """HTTP/1.1 default: keep the connection open unless the client
+    sent ``Connection: close``."""
+    return headers.get("connection", "").lower() != "close"
 
 
 SSE_HEADER = (b"HTTP/1.1 200 OK\r\n"

@@ -159,6 +159,8 @@ class VerificationAwareScheduler:
         self.swap_evictions = 0
         self.swap_expirations = 0   # swap-ins degraded: shared lead died
         self.preempted_refed_tokens = 0
+        self.admission_swaps = 0    # proactive swap-outs at admission
+        self.prefill_fed_tokens = 0  # cumulative prompt tokens actually fed
         # consecutive verify iterations that deferred EVERY chunk with
         # nothing evicted and nothing else executing — a growing streak
         # means no stream can ever free blocks (all holders
@@ -220,6 +222,11 @@ class VerificationAwareScheduler:
         self.slot_slo.pop(slot, None)
         self._first_emit.discard(slot)
         self.engine.reset_slot(slot)
+        if self.swap is not None:
+            # exit-time demotion to the content-addressed host store is
+            # a D2H peek: charge it to the modeled link
+            self.clock.advance(self.latency.host_transfer_ms(
+                self.swap.take_uncharged()))
         self.cloud_len[slot] = 0
         self.slot_age[slot] = -1
         self.free_slots.append(slot)   # FIFO: reuse round-robins over rows
@@ -330,7 +337,15 @@ class VerificationAwareScheduler:
                         f"pool_blocks")
                 matched = alloc.match_prefix(req.tokens)
                 need = full_need - len(matched)
-                if need > alloc.free_blocks - self._swap_in_reserve():
+                # supply counts cached-free (reclaimable) blocks, minus
+                # the matched ones this prompt is about to revive
+                avail = (alloc.allocatable_blocks(matched)
+                         - self._swap_in_reserve())
+                if need > avail and self._admission_swap(need - avail):
+                    # swap-aware admission: an idle cold stream made room
+                    avail = (alloc.allocatable_blocks(matched)
+                             - self._swap_in_reserve())
+                if need > avail:
                     blocks_exhausted = True
                     rest.append(req)
                     continue
@@ -381,10 +396,14 @@ class VerificationAwareScheduler:
         moved = getattr(self.engine, "bytes_to_host", 0) - b0
 
         events = []
-        # shared prefix tokens are cache hits: neither fed nor charged
+        # shared prefix tokens are cache hits: neither fed nor charged;
+        # blocks adopted from the content-addressed host store are
+        # charged as H2D transfers instead (take_uncharged)
         total = sum(len(r.tokens) - r.shared for r in batch)
+        self.prefill_fed_tokens += total
+        adopted = self.swap.take_uncharged() if self.swap is not None else 0
         self.clock.advance(self.latency.prefill_ms(total)
-                           + self.latency.host_transfer_ms(moved))
+                           + self.latency.host_transfer_ms(moved + adopted))
         self.prefill_iterations += 1
         for r in batch:
             T = len(r.tokens)
@@ -526,7 +545,7 @@ class VerificationAwareScheduler:
 
         evicted = False
         while feeding:
-            if sum(demand(e) for e in feeding) <= alloc.free_blocks:
+            if sum(demand(e) for e in feeding) <= alloc.allocatable_blocks():
                 self._defer_streak = 0
                 return True
             victim = self._pick_victim()
@@ -618,6 +637,42 @@ class VerificationAwareScheduler:
             return None
         return pick_victim(self.preempt_policy, cands, self)
 
+    def _admission_swap(self, deficit: int) -> bool:
+        """Swap-aware admission: make room for a queued prompt by swapping
+        *idle* block holders (no pending verify work) to the host tier,
+        rather than turning the prompt away.  Only cold streams are
+        candidates — anything with an in-flight or queued request keeps
+        its device residency.  Returns True if any blocks were freed."""
+        if self.swap is None:
+            return False
+        alloc = self.engine.allocator
+        busy = {r.slot for r in list(self.active_verify) + list(self.verify_q)}
+        freed_any = False
+        while deficit > 0:
+            holders = [s for s in range(self.engine.max_slots)
+                       if alloc.n_blocks_of[s] > 0]
+            if len(holders) <= 1:
+                break
+            oldest = min(holders, key=lambda s: self.slot_age[s])
+            cands = [s for s in holders
+                     if s != oldest and s not in busy
+                     and not self._slot_swapped(s)
+                     and self._swap_possible(s)]
+            if not cands:
+                break
+            victim = pick_victim(self.preempt_policy, cands, self)
+            before = alloc.allocatable_blocks()
+            moved = self.swap.swap_out(victim, self.slot_prompt.get(victim),
+                                       int(self.cloud_len[victim]))
+            if moved is None:
+                break
+            self.swap_evictions += 1
+            self.admission_swaps += 1
+            self.clock.advance(self.latency.host_transfer_ms(moved))
+            deficit -= alloc.allocatable_blocks() - before
+            freed_any = True
+        return freed_any
+
     def _evict(self, slot: int, feeding, tokens, positions, targets,
                sel_idx, kept) -> bool:
         """Evict ``slot`` by the cheaper disposition: swap to the host
@@ -631,7 +686,18 @@ class VerificationAwareScheduler:
                 nbytes = p[2]
                 frontier = int(self.cloud_len[slot])
                 swap_ms = self.latency.swap_roundtrip_ms(nbytes)
-                redo_ms = self.latency.refeed_ms(frontier, self.chunk)
+                redo = frontier
+                if alloc := getattr(self.engine, "allocator", None):
+                    if alloc.retain_prefix:
+                        # under retention a recompute restart re-matches
+                        # its leading blocks (they park cached-free, not
+                        # freed): the disposition compares against the
+                        # cheaper, real refeed
+                        prompt = self.slot_prompt.get(slot)
+                        if prompt is not None:
+                            redo -= (len(alloc.match_prefix(prompt))
+                                     * alloc.block_size)
+                redo_ms = self.latency.refeed_ms(max(0, redo), self.chunk)
                 if swap_ms < redo_ms or not self._slot_restartable(slot):
                     moved = self.swap.swap_out(
                         slot, self.slot_prompt.get(slot), frontier)
@@ -663,7 +729,7 @@ class VerificationAwareScheduler:
             return
         alloc = self.engine.allocator
         for slot in self.swap.swapped_slots:
-            if self.swap.blocks_needed(slot) > alloc.free_blocks:
+            if self.swap.blocks_needed(slot) > alloc.allocatable_blocks():
                 break                  # FIFO: no bypass (anti-starvation)
             res = self.swap.swap_in(slot)
             if res is None:
@@ -675,18 +741,30 @@ class VerificationAwareScheduler:
             self.clock.advance(self.latency.host_transfer_ms(nbytes))
 
     def _rewind_slot(self, slot: int) -> None:
-        """Recompute-eviction bookkeeping: cloud frontier to 0, pending
-        requests rewound to refeed from scratch (re-derived from
-        ``req.seq`` — the from-scratch partial prefill)."""
-        self.cloud_len[slot] = 0
+        """Recompute-eviction bookkeeping: cloud frontier rewinds and
+        pending requests refeed (re-derived from ``req.seq`` — the
+        from-scratch partial prefill).  With prefix retention (or a live
+        sibling) the restart first re-adopts whatever leading blocks the
+        index still holds, so the refeed starts at the first unmatched
+        token instead of zero."""
         self.last_row.pop(slot, None)
-        for r in list(self.active_verify) + list(self.verify_q):
-            if r.slot == slot:
-                self.preempted_refed_tokens += r.start_pos + r.fed
-                r.fed = 0
-                r.rows = []
-                r.start_pos = 0
-                r.uncached = np.asarray(r.seq, np.int64)
+        reqs = [r for r in list(self.active_verify) + list(self.verify_q)
+                if r.slot == slot]
+        shared = 0
+        if reqs and reqs[0].seq is not None:
+            # the earliest request's seq is a prefix of every later one;
+            # matching caps at len-1 so at least one token always feeds
+            shared = self.engine.readopt_prefix(
+                slot, np.asarray(reqs[0].seq)) \
+                if hasattr(self.engine, "readopt_prefix") else 0
+        self.cloud_len[slot] = shared
+        for r in reqs:
+            self.preempted_refed_tokens += max(
+                0, r.start_pos + r.fed - shared)
+            r.fed = 0
+            r.rows = []
+            r.start_pos = shared
+            r.uncached = np.asarray(r.seq, np.int64)[shared:]
 
     def _preempt_slot(self, slot: int, feeding, tokens, positions,
                       targets, sel_idx, kept) -> None:

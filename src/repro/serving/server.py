@@ -79,6 +79,7 @@ class ServerStats:
     block_size: int = 0
     n_blocks: int = 0
     free_blocks: int = 0
+    cached_free_blocks: int = 0        # ref-0 retained prefix blocks (LRU)
     used_blocks: int = 0
     peak_used_blocks: int = 0
     kv_cache_bytes: int = 0
@@ -100,6 +101,19 @@ class ServerStats:
     shared_blocks: int = 0             # blocks currently mapped by >1 slot
     dedupe_hit_blocks: int = 0         # cumulative blocks adopted, not alloc'd
     cow_copies: int = 0                # cumulative copy-on-write forks
+    # -- persistent prefix cache (retain_prefix + content-addressed host) --
+    retain_prefix: bool = False
+    revived_blocks: int = 0            # cached-free blocks re-adopted
+    reclaimed_blocks: int = 0          # cached-free blocks taken under pressure
+    tail_shared_tokens: int = 0        # rows copied by partial-block tail share
+    host_store_blocks: int = 0         # content-addressed host blocks (live)
+    host_lru_blocks: int = 0           # ref-0 host blocks awaiting reuse
+    host_dedupe_hits: int = 0          # swap-outs resolved by the host store
+    host_adopted_blocks: int = 0       # admissions served from the host store
+    adopt_in_bytes: int = 0            # cumulative H2D adoption payload bytes
+    demoted_blocks: int = 0            # blocks demoted to host on release
+    admission_swaps: int = 0           # idle streams swapped to admit prompts
+    prefill_fed_tokens: int = 0        # cumulative tokens fed through prefill
     # -- request lifecycle (gateway front door, serving/gateway/) --
     clock: str = "sim"                 # "sim" (SimClock) | "wall" (RealClock)
     modeled_ms: float = 0.0            # shadow modeled time (== sim_ms on sim)
@@ -447,6 +461,19 @@ class SyneraServer:
             shared_blocks=pool["shared_blocks"],
             dedupe_hit_blocks=pool["dedupe_hit_blocks"],
             cow_copies=pool["cow_copies"],
+            cached_free_blocks=pool["cached_free_blocks"],
+            retain_prefix=pool["retain_prefix"],
+            revived_blocks=pool["revived_blocks"],
+            reclaimed_blocks=pool["reclaimed_blocks"],
+            tail_shared_tokens=pool["tail_shared_tokens"],
+            host_store_blocks=pool["host_store_blocks"],
+            host_lru_blocks=pool["host_lru_blocks"],
+            host_dedupe_hits=pool["host_dedupe_hits"],
+            host_adopted_blocks=pool["host_adopted_blocks"],
+            adopt_in_bytes=pool["adopt_in_bytes"],
+            demoted_blocks=pool["demoted_blocks"],
+            admission_swaps=sched.admission_swaps,
+            prefill_fed_tokens=sched.prefill_fed_tokens,
         )
 
     def stats(self) -> dict:

@@ -1,0 +1,248 @@
+"""Persistent multi-tier prefix cache (ISSUE 8): cross-session block
+reuse, content-addressed host store, partial-block tail sharing.
+
+Layers covered:
+
+* ``BlockAllocator`` retention units — released ref-0 prefix blocks park
+  on the cached-free LRU (still matchable), adoption revives them, LRU
+  reclaim order under allocation pressure, the ``retain_blocks`` cap;
+* engine-level reclaim-under-pressure: a second wave of *different*
+  prompts reclaims wave-1 cached blocks and stays byte-identical to a
+  retention-off paged engine and to dense;
+* adopt-from-host identity: a finished stream's demoted blocks serve a
+  brand-new session (H2D scatter, zero live sharers) bit-for-bit;
+* a hypothesis property: two sequential waves sharing a system prompt
+  are byte-identical across {retention on/off} x {host dedupe on/off}
+  wherever the divergence point falls (including mid-block tails).
+
+Engines are module-scoped fixtures (jitted steps are expensive to
+recompile); retained cache state deliberately persists across examples
+— content addressing must never produce a false hit.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.synera_pair import tiny_pair
+from repro.core.offload import OffloadPolicy
+from repro.models import model as M
+from repro.serving.device import DeviceRuntime
+from repro.serving.engine import BlockAllocator, CloudEngine
+from repro.serving import synergy as SY
+
+S_MAX = 256
+BS = 8
+
+
+@pytest.fixture(scope="module")
+def pair():
+    slm_cfg, llm_cfg = tiny_pair(vocab=64)
+    slm_p = M.init_params(slm_cfg, jax.random.PRNGKey(0))
+    llm_p = M.init_params(llm_cfg, jax.random.PRNGKey(1))
+    return slm_cfg, slm_p, llm_cfg, llm_p
+
+
+@pytest.fixture(scope="module")
+def dev(pair):
+    slm_cfg, slm_p, _, _ = pair
+    return DeviceRuntime(slm_cfg, slm_p, s_max=S_MAX, gamma=4, seed=0,
+                         policy=OffloadPolicy(mode="all"),
+                         use_early_exit=False, use_pi=False)
+
+
+@pytest.fixture(scope="module")
+def eng_dense(pair):
+    _, _, llm_cfg, llm_p = pair
+    return CloudEngine(llm_cfg, llm_p, max_slots=2, s_max=S_MAX)
+
+
+@pytest.fixture(scope="module")
+def eng_base(pair):
+    """Retention-off paged oracle."""
+    _, _, llm_cfg, llm_p = pair
+    return CloudEngine(llm_cfg, llm_p, max_slots=4, s_max=S_MAX,
+                       cache_impl="paged", block_size=BS)
+
+
+@pytest.fixture(scope="module")
+def eng_retain(pair):
+    _, _, llm_cfg, llm_p = pair
+    return CloudEngine(llm_cfg, llm_p, max_slots=4, s_max=S_MAX,
+                       cache_impl="paged", block_size=BS,
+                       retain_prefix=True)
+
+
+@pytest.fixture(scope="module")
+def eng_hswap(pair):
+    """Retention off, content-addressed host store on: finished streams
+    demote their prefix blocks to host; new sessions adopt via H2D."""
+    _, _, llm_cfg, llm_p = pair
+    return CloudEngine(llm_cfg, llm_p, max_slots=4, s_max=S_MAX,
+                       cache_impl="paged", block_size=BS,
+                       share_prefix=True, swap=True, host_dedupe=True)
+
+
+@pytest.fixture(scope="module")
+def eng_both(pair):
+    _, _, llm_cfg, llm_p = pair
+    return CloudEngine(llm_cfg, llm_p, max_slots=4, s_max=S_MAX,
+                       cache_impl="paged", block_size=BS,
+                       retain_prefix=True, swap=True, host_dedupe=True)
+
+
+def _toks(rng, n):
+    return [int(t) for t in rng.integers(1, 60, size=n)]
+
+
+def _wave(common, n_streams, seed, suffix_max=12):
+    rng = np.random.default_rng(seed)
+    return [common + _toks(rng, int(rng.integers(1, suffix_max)))
+            for _ in range(n_streams)]
+
+
+# ---------------------------------------------------------------------------
+# BlockAllocator retention units
+# ---------------------------------------------------------------------------
+
+def test_cached_free_retention_and_revival():
+    a = BlockAllocator(8, 4, 4, 8, retain_prefix=True)
+    toks = list(range(1, 13))                    # 3 full blocks
+    assert a.extend(0, 12)
+    a.register_prefix(0, toks)
+    a.prepare_writes(0, range(3))                # realize fill-pending
+    bids = [int(a.table[0, j]) for j in range(3)]
+    freed = a.release(0)
+    # every registered block parks on the cached-free LRU, none freed
+    assert list(freed) == []
+    assert a.cached_blocks == 3 and a.used_blocks == 0
+    assert a.free_blocks == 5
+    # still matchable across the session boundary (len-1 cap: 2 of 3)
+    m = a.match_prefix(toks)
+    assert m == bids[:2]
+    a.adopt_prefix(1, m)                         # revives, no allocation
+    assert a.revived_blocks == 2
+    assert a.cached_blocks == 1 and a.used_blocks == 2
+    assert all(int(a.ref[b]) == 1 for b in m)
+    # releasing the adopter parks them again
+    assert list(a.release(1)) == []
+    assert a.cached_blocks == 3 and a.used_blocks == 0
+
+
+def test_lru_reclaim_ordering_under_pressure():
+    a = BlockAllocator(6, 4, 4, 8, retain_prefix=True)
+    t1, t2 = list(range(1, 9)), list(range(21, 29))   # 2 blocks each
+    assert a.extend(0, 8)
+    a.register_prefix(0, t1)
+    a.prepare_writes(0, range(2))
+    assert a.extend(1, 8)
+    a.register_prefix(1, t2)
+    a.prepare_writes(1, range(2))
+    bids1 = [int(a.table[0, j]) for j in range(2)]
+    a.release(0)                                 # parked first = LRU end
+    a.release(1)
+    assert a.cached_blocks == 4 and a.free_blocks == 2
+    assert a.allocatable_blocks() == 6
+    # pressure: 4 blocks needed, only 2 truly free -> reclaim exactly
+    # the 2 least-recently-parked blocks (slot 0's), in park order
+    assert a.extend(2, 16)
+    assert a.reclaimed_blocks == 2
+    assert a.take_reclaimed() == bids1
+    assert a.take_reclaimed() == []              # drained
+    # the reclaimed chain is gone from the index; the younger survives
+    assert a.match_prefix(t1) == []
+    assert len(a.match_prefix(t2)) == 1
+    assert a.cached_blocks == 2 and a.used_blocks == 4
+
+
+def test_retain_blocks_cap_evicts_lru():
+    a = BlockAllocator(8, 4, 4, 8, retain_prefix=True, retain_blocks=2)
+    toks = list(range(1, 13))
+    assert a.extend(0, 12)
+    a.register_prefix(0, toks)
+    a.prepare_writes(0, range(3))
+    bids = [int(a.table[0, j]) for j in range(3)]
+    freed = a.release(0)
+    # cap 2: the least-recently-parked block spills to the free list
+    # (and is returned for invalidation)
+    assert list(freed) == [bids[0]]
+    assert a.cached_blocks == 2
+    assert a.match_prefix(toks) == []            # chain broke at block 0
+    assert a.match_prefix(toks[:1]) == []
+
+
+# ---------------------------------------------------------------------------
+# Engine-level: reclaim under pressure, adopt from host
+# ---------------------------------------------------------------------------
+
+def test_reclaim_under_pressure_identity(dev, eng_dense, pair):
+    """Retention on a tight pool: wave 2 with *different* prompts must
+    reclaim wave-1 cached blocks, and both waves stay byte-identical to
+    a retention-off paged engine and to dense."""
+    _, _, llm_cfg, llm_p = pair
+    mk = dict(max_slots=2, s_max=S_MAX, cache_impl="paged",
+              block_size=4, pool_blocks=14)
+    eng_r = CloudEngine(llm_cfg, llm_p, retain_prefix=True, **mk)
+    eng_p = CloudEngine(llm_cfg, llm_p, **mk)
+    w1 = _wave(_toks(np.random.default_rng(101), 8), 2, seed=7)
+    w2 = _wave(_toks(np.random.default_rng(202), 8), 2, seed=9)
+    for wave in (w1, w2):
+        r_ref = SY.run_synera(dev, eng_dense, wave, 8, concurrency=1)
+        r_p = SY.run_synera(dev, eng_p, wave, 8, concurrency=2)
+        r_r = SY.run_synera(dev, eng_r, wave, 8, concurrency=2)
+        assert r_p.outputs == r_ref.outputs
+        assert r_r.outputs == r_ref.outputs
+    a = eng_r.allocator
+    assert a.reclaimed_blocks > 0, dict(eng_r.pool_stats)
+    assert a.used_blocks == 0
+
+
+def test_adopt_from_host_identity(dev, eng_base, eng_hswap):
+    """A finished stream's demoted blocks serve a brand-new session:
+    wave 2 adopts from the content-addressed host store (zero live
+    sharers) and stays bit-identical to the non-caching paged engine."""
+    common = _toks(np.random.default_rng(303), 3 * BS)
+    w1 = _wave(common, 2, seed=11)
+    w2 = _wave(common, 2, seed=13)               # fresh suffixes
+    r1_ref = SY.run_synera(dev, eng_base, w1, 8, concurrency=2)
+    r1 = SY.run_synera(dev, eng_hswap, w1, 8, concurrency=2)
+    assert r1.outputs == r1_ref.outputs
+    sm = eng_hswap.swap_manager
+    # wave 1 finished: its prefix chain was demoted, nobody shares it
+    assert sm.host_store_blocks > 0
+    assert sm.host_lru_blocks == sm.host_store_blocks
+    assert eng_hswap.allocator.used_blocks == 0
+    r2_ref = SY.run_synera(dev, eng_base, w2, 8, concurrency=2)
+    r2 = SY.run_synera(dev, eng_hswap, w2, 8, concurrency=2)
+    assert r2.outputs == r2_ref.outputs
+    assert sm.host_adopted_blocks > 0, dict(eng_hswap.pool_stats)
+    assert sm.adopt_in_bytes > 0
+
+
+# ---------------------------------------------------------------------------
+# Property: identity across the retention x host-dedupe matrix
+# ---------------------------------------------------------------------------
+
+@given(st.integers(4, 20),        # common prefix length (mid-block tails)
+       st.integers(2, 3),         # streams per wave
+       st.integers(1, 11))        # wave seed
+@settings(max_examples=3, deadline=None)
+def test_persistent_cache_identity_matrix(dev, eng_base, eng_retain,
+                                          eng_hswap, eng_both,
+                                          common_len, n_streams, seed):
+    """Two sequential waves sharing a system prompt are byte-identical
+    across {retention on/off} x {host dedupe on/off}, wherever the
+    divergence point falls relative to block boundaries."""
+    rng = np.random.default_rng(common_len * 37 + seed)
+    common = _toks(rng, common_len)
+    waves = [_wave(common, n_streams, seed=seed + k) for k in range(2)]
+    for wave in waves:
+        ref = SY.run_synera(dev, eng_base, wave, 8,
+                            concurrency=n_streams).outputs
+        for eng in (eng_retain, eng_hswap, eng_both):
+            got = SY.run_synera(dev, eng, wave, 8,
+                                concurrency=n_streams).outputs
+            assert got == ref, dict(eng.pool_stats)
+            assert eng.allocator.used_blocks == 0

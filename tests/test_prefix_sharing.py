@@ -282,7 +282,8 @@ def test_forced_cow_fork_preserves_identity(pair):
                           cache_impl="paged", block_size=4)
     got_on, m_on = _drive_cow_script(eng_on)
     got_off, m_off = _drive_cow_script(eng_off)
-    assert m_on == 8 and m_off == 0             # sharing actually engaged
+    # sharing actually engaged: 2 whole blocks + 3 tail rows (len-1 cap)
+    assert m_on == 11 and m_off == 0
     a = eng_on.allocator
     assert a.cow_copies == 1                    # exactly one fork
     assert a.dedupe_hit_blocks == 2

@@ -164,8 +164,9 @@ def test_manager_shared_lead_drops_ref_and_readopts(pair):
     a, sw = eng.allocator, eng.swap_manager
     P = _prompts([12], seed=7)[0]
     _prefill_slot(eng, 0, P)
-    m1 = _prefill_slot(eng, 1, P)          # adopts 2 leading blocks
-    assert m1 == 8 and a.shared_blocks == 2
+    # adopts 2 leading blocks + 3 tail rows of the third (len-1 cap)
+    m1 = _prefill_slot(eng, 1, P)
+    assert m1 == 11 and a.shared_blocks == 2
     lead, n_swap, _ = sw.plan(1)
     assert (lead, n_swap) == (2, 1)        # only the private tail moves
     used0 = a.used_blocks
@@ -191,7 +192,7 @@ def test_manager_swap_in_after_share_expired(pair):
     sw = eng.swap_manager
     P = _prompts([12], seed=9)[0]
     _prefill_slot(eng, 0, P)
-    assert _prefill_slot(eng, 1, P) == 8
+    assert _prefill_slot(eng, 1, P) == 11  # 2 blocks + 3 tail rows
     sw.swap_out(1, P, len(P))
     eng.reset_slot(0)                      # sibling dies: share expires
     assert sw.swap_in(1) is None
