@@ -47,12 +47,22 @@ Three sweeps:
    shared-prefix length fewer prefill tokens, and the swap variant must
    adopt blocks from the host store.
 
+6. **Fleet routing sweep** (``fleet_sweep``): R independent cloud
+   replicas behind a ``ReplicaRouter``, serving streams that share a
+   system prompt, once per routing policy on a fresh fleet.  Outputs
+   are asserted byte-identical across all policies and to a
+   single-engine run; prefix-affinity must feed fewer total prefill
+   tokens than round-robin (it concentrates the shared prefix on the
+   replica already holding it, round-robin re-prefills it once per
+   replica).
+
 Usage:
   PYTHONPATH=src:. python -m benchmarks.scale_bench [--fast] \
       [--streams 1,2,4,8] [--concurrency 8,32,128] \
       [--shared-streams 4,8] [--prefix-blocks 4] \
       [--preempt-concurrency 8,32,128] \
       [--cross-waves 3] [--cross-streams 2] \
+      [--fleet-replicas 4] [--fleet-streams 64] \
       [--out benchmarks/BENCH_scale.json]
 
 Skipped sweeps ('' as the list) keep their previously written section
@@ -478,6 +488,91 @@ def run_cross_session_sweep(waves: int = 3, streams: int = 2,
                 rows=rows)
 
 
+def run_fleet_sweep(replicas=(4,), streams: int = 64, max_new: int = 4,
+                    slots: int = 4, block_size: int = 8,
+                    prefix_blocks: int = 4, suffix_tokens: int = 8,
+                    concurrency: int = 8) -> dict:
+    """Multi-replica routing (ISSUE 9): R independent cloud replicas
+    behind a ``ReplicaRouter``, all streams sharing a system prompt of
+    ``prefix_blocks`` full blocks.
+
+    Workload shape: one seed stream, then the remaining streams
+    admitted ``concurrency`` at a time — so every post-seed placement
+    probes a fleet that already holds the prefix somewhere.  Each
+    policy gets a FRESH fleet of retain+share_prefix paged engines.
+
+    Asserted: outputs byte-identical across all policies and to a
+    single-engine run; prefix-affinity feeds strictly fewer total
+    prefill tokens than round-robin.
+    """
+    from benchmarks import paper_claims as PC
+    from benchmarks.prepare import get_pair
+    from repro.core.offload import OffloadPolicy
+    from repro.serving import synergy as SY
+    from repro.serving.router import ROUTE_POLICIES, ReplicaRouter
+    from repro.serving.server import build_fleet
+
+    slm_cfg, slm_p, llm_cfg, llm_p, task = get_pair()
+    dev = PC.make_device(slm_cfg, slm_p,
+                         policy=OffloadPolicy(mode="all"),
+                         use_early_exit=False)
+    rng = np.random.default_rng(61)
+    vocab = slm_cfg.vocab
+    common = [int(t) for t in rng.integers(1, vocab - 1,
+                                           prefix_blocks * block_size)]
+    prompts = [common + [int(t) for t in rng.integers(1, vocab - 1,
+                                                      suffix_tokens)]
+               for _ in range(streams)]
+
+    mk = lambda: PC.make_engine(llm_cfg, llm_p, slots=slots,
+                                cache_impl="paged", block_size=block_size,
+                                share_prefix=True, retain_prefix=True)
+
+    r_ref = SY.run_synera(dev, mk(), prompts, max_new, concurrency=1)
+    ref_out = [[int(t) for t in o] for o in r_ref.outputs]
+
+    rows = []
+    for n_rep in replicas:
+        row = dict(replicas=n_rep, streams=streams,
+                   prefix_tokens=len(common), concurrency=concurrency)
+        for policy in ROUTE_POLICIES:
+            router = ReplicaRouter(
+                build_fleet(dev, [mk() for _ in range(n_rep)]),
+                policy=policy)
+            t0 = time.time()
+            metrics = router.serve(prompts[:1], max_new, concurrency=1)
+            metrics += router.serve(prompts[1:], max_new,
+                                    concurrency=concurrency)
+            wall = time.time() - t0
+            outs = [[int(t) for t in m.tokens] for m in metrics]
+            assert outs == ref_out, \
+                f"{policy} routing must not change greedy token streams"
+            st = router.stats()
+            touched = {router.owner[id(s)] for s in router.sessions}
+            row[policy] = dict(
+                prefill_fed_tokens=st["prefill_fed_tokens"],
+                affinity_hits=st["affinity_hits"],
+                revived_blocks=st["revived_blocks"],
+                dedupe_hit_blocks=st["dedupe_hit_blocks"],
+                replicas_touched=len(touched),
+                degraded_streams=st["degraded_streams"],
+                wall_s=wall)
+        fed_aff = row["prefix-affinity"]["prefill_fed_tokens"]
+        fed_rr = row["round-robin"]["prefill_fed_tokens"]
+        assert fed_aff < fed_rr, row
+        rows.append(row)
+        print(f"replicas={n_rep} streams={streams} prefill_fed "
+              f"rr={fed_rr} ll="
+              f"{row['least-loaded']['prefill_fed_tokens']} "
+              f"affinity={fed_aff} "
+              f"(hits={row['prefix-affinity']['affinity_hits']}, "
+              f"touched {row['prefix-affinity']['replicas_touched']} vs "
+              f"rr {row['round-robin']['replicas_touched']})", flush=True)
+    return dict(streams=streams, max_new=max_new, slots=slots,
+                block_size=block_size, prefix_blocks=prefix_blocks,
+                suffix_tokens=suffix_tokens, rows=rows)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
@@ -498,6 +593,11 @@ def main():
                          "cross-session reuse sweep ('' to skip)")
     ap.add_argument("--cross-streams", type=int, default=2,
                     help="sessions per wave in the cross-session sweep")
+    ap.add_argument("--fleet-replicas", default="4",
+                    help="replica counts for the multi-replica routing "
+                         "sweep ('' to skip)")
+    ap.add_argument("--fleet-streams", type=int, default=64,
+                    help="streams per fleet-sweep row")
     ap.add_argument("--slots", type=int, default=8)
     ap.add_argument("--block-size", type=int, default=8)
     ap.add_argument("--out", default="benchmarks/BENCH_scale.json")
@@ -534,6 +634,13 @@ def main():
         res["cross_session_sweep"] = run_cross_session_sweep(
             waves=int(args.cross_waves), streams=args.cross_streams,
             max_new=4 if args.fast else 6,
+            block_size=args.block_size,
+            prefix_blocks=args.prefix_blocks)
+    if args.fleet_replicas:
+        reps = tuple(int(s) for s in args.fleet_replicas.split(","))
+        res["fleet_sweep"] = run_fleet_sweep(
+            replicas=reps,
+            streams=16 if args.fast else args.fleet_streams,
             block_size=args.block_size,
             prefix_blocks=args.prefix_blocks)
     with open(args.out, "w") as f:

@@ -13,6 +13,12 @@ chunks from multiple slots; ``--concurrency 0`` means unbounded.
 ``--arrival-rate R`` draws Poisson request arrivals at R req/s on the
 shared simulated clock (default: all streams arrive at admission).
 
+``--replicas N`` (synera mode) serves the batch across N independent
+cloud replicas behind a ``ReplicaRouter`` (serving/router.py); each
+admission is placed by ``--route-policy`` (round-robin / least-loaded /
+prefix-affinity) and token streams stay byte-identical to the
+single-replica run.  Composes with ``--http``.
+
 ``--http`` instead brings up the OpenAI-compatible streaming gateway
 (serving/gateway/, docs/serving_api.md) over the same engine + device
 pair and serves real sockets until interrupted:
@@ -134,6 +140,23 @@ def main():
                          "sharing; task quality scores still use the "
                          "unmodified prompts, so treat them as a smoke "
                          "signal only)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="cloud replicas behind a ReplicaRouter (each an "
+                         "independent engine + scheduler with its own "
+                         "block pool / prefix index / swap tier); 1 = "
+                         "no router (synera mode and --http only)")
+    ap.add_argument("--route-policy", default="least-loaded",
+                    choices=["round-robin", "least-loaded",
+                             "prefix-affinity"],
+                    help="fleet placement policy (--replicas > 1): "
+                         "rotate, fewest live sessions / most free "
+                         "blocks, or the replica whose prefix cache "
+                         "already holds the longest prefix of the prompt")
+    ap.add_argument("--replica-queue-cap", type=int, default=0,
+                    help="live sessions per replica before it counts as "
+                         "saturated; when ALL replicas are past it, new "
+                         "streams degrade to device-only generation "
+                         "instead of rejecting (0 = unbounded)")
     ap.add_argument("--json", action="store_true")
     ap.add_argument("--http", action="store_true",
                     help="serve the OpenAI-compatible streaming HTTP "
@@ -159,6 +182,11 @@ def main():
         ap.error("--concurrency must be >= 0 (0 = unbounded)")
     if args.http and args.mode != "synera":
         ap.error("--http serves the synera pipeline (--mode synera)")
+    if args.replicas < 1:
+        ap.error("--replicas must be >= 1")
+    if args.replicas > 1 and args.mode != "synera":
+        ap.error("--replicas > 1 requires --mode synera (the fleet "
+                 "router places synera sessions)")
 
     from benchmarks import paper_claims as PC
     from benchmarks.prepare import get_pair
@@ -179,20 +207,27 @@ def main():
     link = LinkModel(bandwidth_mbps=args.bandwidth_mbps)
     if args.swap and args.cache_impl != "paged":
         ap.error("--swap requires --cache-impl paged")
-    eng = PC.make_engine(llm_cfg, llm_p, slots=args.slots,
-                         attn_impl=args.attn_impl,
-                         verify_top_k=args.verify_top_k,
-                         cache_impl=args.cache_impl,
-                         block_size=args.block_size,
-                         pool_blocks=args.pool_blocks,
-                         share_prefix=args.share_prefix,
-                         swap=args.swap,
-                         host_swap_blocks=args.host_swap_blocks,
-                         retain_prefix=args.retain_prefix,
-                         retain_blocks=args.retain_blocks,
-                         host_dedupe=args.host_dedupe,
-                         paged_block_kv=args.block_kv,
-                         kv_splits=args.kv_splits)
+    def mk_engine():
+        return PC.make_engine(llm_cfg, llm_p, slots=args.slots,
+                              attn_impl=args.attn_impl,
+                              verify_top_k=args.verify_top_k,
+                              cache_impl=args.cache_impl,
+                              block_size=args.block_size,
+                              pool_blocks=args.pool_blocks,
+                              share_prefix=args.share_prefix,
+                              swap=args.swap,
+                              host_swap_blocks=args.host_swap_blocks,
+                              retain_prefix=args.retain_prefix,
+                              retain_blocks=args.retain_blocks,
+                              host_dedupe=args.host_dedupe,
+                              paged_block_kv=args.block_kv,
+                              kv_splits=args.kv_splits)
+
+    eng = mk_engine()
+    # fleet mode: replica 0 reuses `eng` (also the profiling target);
+    # the rest are independent engines with their own pools and caches
+    engines = ([eng] + [mk_engine() for _ in range(args.replicas - 1)]
+               if args.replicas > 1 else [eng])
     concurrency = None if args.concurrency == 0 else args.concurrency
     arrivals = None
     if args.arrival_rate > 0:
@@ -227,11 +262,20 @@ def main():
     if args.http:
         from repro.serving.gateway import Gateway, GatewayConfig
         from repro.serving.link import RealClock
-        from repro.serving.server import SyneraServer
-        server = SyneraServer(dev, eng,
-                              clock=RealClock(pace=args.wall_pace),
-                              preempt_policy=args.preempt_policy,
-                              clamp_arrivals=not args.wall_pace)
+        from repro.serving.server import SyneraServer, build_fleet
+        if args.replicas > 1:
+            from repro.serving.router import ReplicaRouter
+            servers = build_fleet(dev, engines,
+                                  clock=RealClock(pace=args.wall_pace),
+                                  preempt_policy=args.preempt_policy,
+                                  clamp_arrivals=not args.wall_pace)
+            server = ReplicaRouter(servers, policy=args.route_policy,
+                                   replica_queue_cap=args.replica_queue_cap)
+        else:
+            server = SyneraServer(dev, eng,
+                                  clock=RealClock(pace=args.wall_pace),
+                                  preempt_policy=args.preempt_policy,
+                                  clamp_arrivals=not args.wall_pace)
         Gateway(server, GatewayConfig(
             host=args.host, port=args.port,
             max_new_default=args.max_new,
@@ -239,11 +283,20 @@ def main():
             queue_cap=args.queue_cap)).run_forever()
         return
 
+    def run_synera_batch():
+        if args.replicas > 1:
+            return SY.run_synera_fleet(
+                dev, engines, prompts, args.max_new,
+                policy=args.route_policy,
+                replica_queue_cap=args.replica_queue_cap,
+                concurrency=concurrency, arrivals=arrivals,
+                preempt_policy=args.preempt_policy)
+        return SY.run_synera(dev, eng, prompts, args.max_new,
+                             concurrency=concurrency, arrivals=arrivals,
+                             preempt_policy=args.preempt_policy)
+
     run = {
-        "synera": lambda: SY.run_synera(dev, eng, prompts, args.max_new,
-                                        concurrency=concurrency,
-                                        arrivals=arrivals,
-                                        preempt_policy=args.preempt_policy),
+        "synera": run_synera_batch,
         "edge": lambda: SY.run_edge_centric(dev, prompts, args.max_new),
         "cloud": lambda: SY.run_cloud_centric(eng, prompts, args.max_new,
                                               link=link),
@@ -305,6 +358,14 @@ def main():
                 host_adopted_blocks=sched["host_adopted_blocks"],
                 admission_swaps=sched["admission_swaps"],
                 prefill_fed_tokens=sched["prefill_fed_tokens"])
+        if sched.get("replicas", 1) > 1:
+            summary.update(
+                replicas=sched["replicas"],
+                route_policy=sched["route_policy"],
+                affinity_hits=sched["affinity_hits"],
+                degraded_streams=sched["degraded_streams"],
+                rerouted_sessions=sched["rerouted_sessions"],
+                dead_replicas=sched["dead_replicas"])
     summary.update(
         engine_host_bytes=eng.bytes_to_host,
         engine_specializations=eng.compile_stats["n_specializations"])

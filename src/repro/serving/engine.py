@@ -701,6 +701,19 @@ class CloudEngine:
         self._calls = {"feed": 0, "prefill": 0, "decode": 0,
                        "feed_logits": 0, "decode_logits": 0}
         self._specializations: set = set()
+        # fault injection (serving/router.py): a replica marked dead must
+        # never serve again — any further compute dispatch raises
+        self.dead = False
+
+    def mark_dead(self):
+        """Poison this engine: every subsequent compute dispatch raises.
+
+        The router uses this when it kills a replica — its sessions are
+        re-placed on survivors as from-scratch prefills, and nothing
+        (not even slot release) may touch the dead replica's pool again,
+        so a routing bug that still dispatches here fails loudly instead
+        of silently corrupting the fault-injection tests."""
+        self.dead = True
 
     # -- telemetry ------------------------------------------------------
     @property
@@ -783,6 +796,10 @@ class CloudEngine:
         Raises :class:`BlockPoolExhausted` when the pool is dry; the
         scheduler's admission + preemption layer is responsible for
         never letting that happen."""
+        if self.dead:
+            raise RuntimeError(
+                "CloudEngine is marked dead (replica killed); no dispatch "
+                "may reach it — sessions must be re-placed on a survivor")
         if self.allocator is None:
             return
         pos = np.asarray(positions)

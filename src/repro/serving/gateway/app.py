@@ -1,6 +1,12 @@
 """The Synera gateway: an asyncio OpenAI-compatible front door over
 ``SyneraServer``.
 
+The ``server`` may equally be a ``ReplicaRouter`` (serving/router.py)
+fronting N cloud replicas — it exposes the same open/cancel/step/stats
+surface, every admission is then routed by the fleet policy, and
+``/metrics?replica=N`` exposes one replica's own counters next to the
+aggregated fleet view at ``/metrics``.
+
 Two threads cooperate:
 
 * the **asyncio thread** owns the sockets: it parses HTTP, enforces
@@ -165,12 +171,20 @@ class Gateway:
             elif kind == "stats":
                 # fresh stats computed on the engine thread: server state
                 # is only ever touched here, so /metrics never races a
-                # step() in progress
-                loop, fut = st
-                self._refresh_stats(force=True)
+                # step() in progress.  ridx selects one replica's view
+                # behind a ReplicaRouter (/metrics?replica=N).
+                loop, fut, ridx = st
+                if ridx is None:
+                    self._refresh_stats(force=True)
+                    snap = dict(self._stats)
+                else:
+                    try:
+                        snap = self.server.replica_stats(int(ridx))
+                    except (AttributeError, IndexError, ValueError):
+                        snap = {"error": f"no replica {ridx!r}"}
                 try:
                     loop.call_soon_threadsafe(
-                        lambda f=fut, s=dict(self._stats):
+                        lambda f=fut, s=snap:
                         f.done() or f.set_result(s))
                 except RuntimeError:
                     pass
@@ -312,16 +326,31 @@ class Gateway:
                                    "queued": self._n_queued}).encode()
             writer.write(H.response(200, body, keep_alive=keep))
         elif hreq.path == "/metrics":
+            ridx = hreq.query.get("replica")
             loop = asyncio.get_running_loop()
             fut = loop.create_future()
-            self._submit(("stats", (loop, fut)))
+            self._submit(("stats", (loop, fut, ridx)))
             try:
                 stats = await asyncio.wait_for(fut, timeout=10)
             except asyncio.TimeoutError:
-                stats = dict(self._stats)   # engine wedged: last snapshot
-            with self._lock:
-                stats["gateway_active"] = self._n_open
-                stats["gateway_queued"] = self._n_queued
+                if ridx is not None:
+                    stats = {"error": "engine busy; retry"}
+                else:
+                    stats = dict(self._stats)  # engine wedged: last snapshot
+            if "error" in stats:
+                # unknown replica index, or a single-server gateway asked
+                # for a per-replica view (no ReplicaRouter in front)
+                writer.write(H.response(
+                    404, json.dumps({"error": {
+                        "message": stats["error"]}}).encode(),
+                    keep_alive=keep))
+                await writer.drain()
+                return b"" if keep else None
+            if ridx is None:
+                # gateway-level gauges only make sense on the fleet view
+                with self._lock:
+                    stats["gateway_active"] = self._n_open
+                    stats["gateway_queued"] = self._n_queued
             if hreq.query.get("format") == "json":
                 writer.write(H.response(200, json.dumps(stats).encode(),
                                         keep_alive=keep))

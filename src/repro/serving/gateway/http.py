@@ -4,8 +4,8 @@ The container has no third-party web stack (no aiohttp/FastAPI/uvicorn),
 so the gateway speaks HTTP directly over asyncio streams.  Scope is
 deliberately tiny — exactly what the gateway and its bench client need:
 
-* request parsing (request line, headers, Content-Length body; bodies
-  are capped, chunked request bodies are not accepted),
+* request parsing (request line, headers, body framed by Content-Length
+  or ``Transfer-Encoding: chunked``; bodies are capped either way),
 * fixed responses and SSE streaming responses,
 * HTTP/1.1 keep-alive: fixed responses carry ``Connection: keep-alive``
   unless the client asked to close, so one connection can carry many
@@ -63,18 +63,53 @@ async def read_request(reader, first: bytes = b"") -> HTTPRequest | None:
     else:
         raise BadRequest("too many header lines")
     if "chunked" in headers.get("transfer-encoding", "").lower():
-        raise BadRequest("chunked request bodies are not supported")
-    try:
-        clen = int(headers.get("content-length", "0"))
-    except ValueError:
-        raise BadRequest("bad Content-Length")
-    if not 0 <= clen <= MAX_BODY_BYTES:
-        raise BadRequest(f"body too large ({clen} bytes)")
-    body = await reader.readexactly(clen) if clen else b""
+        body = await _read_chunked(reader)
+    else:
+        try:
+            clen = int(headers.get("content-length", "0"))
+        except ValueError:
+            raise BadRequest("bad Content-Length")
+        if not 0 <= clen <= MAX_BODY_BYTES:
+            raise BadRequest(f"body too large ({clen} bytes)")
+        body = await reader.readexactly(clen) if clen else b""
     parts = urlsplit(target)
     query = {k: v[0] for k, v in parse_qs(parts.query).items()}
     return HTTPRequest(method=method.upper(), path=parts.path, query=query,
                        headers=headers, body=body)
+
+
+async def _read_chunked(reader) -> bytes:
+    """Decode a ``Transfer-Encoding: chunked`` request body (RFC 9112
+    §7.1): ``size-in-hex[;ext] CRLF data CRLF`` frames until a zero-size
+    chunk, then trailer lines up to a blank line.  Trailers are read and
+    discarded; the cumulative body is capped at ``MAX_BODY_BYTES`` so a
+    client cannot stream unbounded data by never sending the terminal
+    chunk."""
+    body = bytearray()
+    while True:
+        line = await reader.readline()
+        if not line.endswith(b"\n"):
+            raise BadRequest("truncated chunk size line")
+        size_s = line.strip().split(b";", 1)[0]   # drop chunk extensions
+        try:
+            size = int(size_s, 16)
+        except ValueError:
+            raise BadRequest(f"bad chunk size: {size_s[:20]!r}")
+        if size < 0:
+            raise BadRequest(f"bad chunk size: {size_s[:20]!r}")
+        if size == 0:
+            break
+        if len(body) + size > MAX_BODY_BYTES:
+            raise BadRequest(f"chunked body too large "
+                             f"(> {MAX_BODY_BYTES} bytes)")
+        body += await reader.readexactly(size)
+        if await reader.readexactly(2) != b"\r\n":
+            raise BadRequest("chunk data not CRLF-terminated")
+    for _ in range(MAX_HEADER_LINES):
+        t = await reader.readline()
+        if t in (b"\r\n", b"\n", b""):
+            return bytes(body)
+    raise BadRequest("too many trailer lines")
 
 
 def response(status: int, body: bytes, *,

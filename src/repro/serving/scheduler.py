@@ -251,6 +251,23 @@ class VerificationAwareScheduler:
         self.active_verify = [r for r in self.active_verify
                               if r.req_id not in req_ids]
 
+    def export_requests(self, req_ids: set) -> list[VerifyRequest]:
+        """Remove and return the verify requests in ``req_ids`` (replica
+        death: the router re-places a dying replica's sessions on
+        survivors).  Unlike :meth:`cancel_requests` the requests come
+        back to the caller: each carries its full accepted stream in
+        ``seq`` — the same restartability contract the recompute
+        eviction path relies on — so the survivor can re-prefill the
+        stream from scratch and re-run the parked verify on top.
+        Queued prompt prefills in ``req_ids`` are simply dropped; the
+        re-placement re-prefills the full stream anyway."""
+        if not req_ids:
+            return []
+        out = [r for r in list(self.active_verify) + list(self.verify_q)
+               if r.req_id in req_ids]
+        self.cancel_requests(req_ids)
+        return out
+
     # ------------------------------------------------------------------
     def run_iteration(self) -> list[SchedulerEvent]:
         """One scheduling iteration (one trip through Algorithm 1's loop).

@@ -189,6 +189,49 @@ def run_synera(device: DeviceRuntime, engine: CloudEngine,
     return res.summarize(cost_model or CostModel())
 
 
+def run_synera_fleet(device: DeviceRuntime, engines: list[CloudEngine],
+                     prompts: list[list[int]], max_new: int, *,
+                     policy: str = "least-loaded",
+                     replica_queue_cap: int = 0,
+                     sampling: str = "greedy",
+                     cost_model: CostModel | None = None,
+                     chunk: int = 32,
+                     concurrency: int | None = 1,
+                     arrivals: list[float] | None = None,
+                     latency: CloudLatencyModel | None = None,
+                     preempt_policy: str | None = None,
+                     slos: list | None = None) -> RunResult:
+    """Serve ``prompts`` across a fleet of cloud replicas behind a
+    ``ReplicaRouter`` (serving/router.py).
+
+    One ``SyneraServer`` per engine, all on one shared clock and one
+    device runtime; each admission is placed by ``policy`` (round-robin
+    / least-loaded / prefix-affinity).  Placement must never change
+    content: greedy token streams are byte-identical to the
+    single-engine ``run_synera`` run regardless of policy or replica
+    count.  ``replica_queue_cap`` bounds live sessions per replica —
+    when every replica is past it, new streams degrade to device-only
+    generation instead of being rejected.  ``extras['scheduler']`` is
+    the fleet-aggregated stats dict; ``extras['replicas']`` the
+    per-replica views."""
+    from repro.serving.router import ReplicaRouter
+    from repro.serving.server import build_fleet
+    servers = build_fleet(device, engines, chunk=chunk, sampling=sampling,
+                          latency=latency, preempt_policy=preempt_policy)
+    router = ReplicaRouter(servers, policy=policy,
+                           replica_queue_cap=replica_queue_cap)
+    metrics = router.serve(prompts, max_new, concurrency=concurrency,
+                           arrivals=arrivals, slos=slos)
+    res = RunResult()
+    for m in metrics:
+        res.outputs.append(m.tokens)
+        res.metrics.append(m)
+    res.extras["scheduler"] = router.stats()
+    res.extras["replicas"] = [router.replica_stats(i)
+                              for i in range(router.n_replicas)]
+    return res.summarize(cost_model or CostModel())
+
+
 def run_edge_centric(device: DeviceRuntime, prompts, max_new,
                      cost_model=None) -> RunResult:
     res = RunResult()

@@ -503,3 +503,83 @@ def test_observability_endpoints(dev, eng4):
         assert status == 405
     finally:
         gw.close()
+
+def _send_chunked(sock, path, obj, chunk_size=16, trailer=True):
+    """POST ``obj`` as a Transfer-Encoding: chunked body split into
+    fixed-size frames, ending with a zero chunk and an optional
+    trailer section."""
+    payload = json.dumps(obj).encode()
+    head = [f"POST {path} HTTP/1.1", "Host: t",
+            "Content-Type: application/json",
+            "Transfer-Encoding: chunked"]
+    sock.sendall(("\r\n".join(head) + "\r\n\r\n").encode())
+    for i in range(0, len(payload), chunk_size):
+        frame = payload[i:i + chunk_size]
+        sock.sendall(f"{len(frame):x};ext=ignored\r\n".encode()
+                     + frame + b"\r\n")
+    tail = b"0\r\n"
+    tail += b"X-Trailer: done\r\n\r\n" if trailer else b"\r\n"
+    sock.sendall(tail)
+
+
+def test_chunked_request_body_keep_alive(dev, eng4):
+    """A chunked-encoded chat request over a keep-alive connection is
+    decoded to the same body a Content-Length request would carry: the
+    deterministic server returns byte-identical completions for both
+    framings on the same socket."""
+    gw, _server = _start_gateway(dev, eng4)
+    try:
+        prompt = _prompts(1, length=6)[0]
+        body_obj = _chat_body(prompt, 4, stream=False)
+        sock = socket.create_connection(("127.0.0.1", gw.port),
+                                        timeout=180)
+        try:
+            # exchange 1: chunked framing (3+ frames plus a trailer)
+            _send_chunked(sock, "/v1/chat/completions", body_obj,
+                          chunk_size=16)
+            status, headers, body = _recv_response(sock)
+            assert status == 200
+            assert headers["connection"] == "keep-alive"
+            chunked_choice = json.loads(body)["choices"][0]
+            assert chunked_choice["finish_reason"] in ("stop", "length")
+
+            # exchange 2, same socket: classic Content-Length framing
+            payload = json.dumps(body_obj).encode()
+            sock.sendall((f"POST /v1/chat/completions HTTP/1.1\r\n"
+                          f"Host: t\r\n"
+                          f"Content-Type: application/json\r\n"
+                          f"Content-Length: {len(payload)}\r\n\r\n"
+                          ).encode() + payload)
+            status, headers, body = _recv_response(sock)
+            assert status == 200
+            assert headers["connection"] == "keep-alive"
+            plain_choice = json.loads(body)["choices"][0]
+            # identical body => identical deterministic completion
+            assert plain_choice["message"] == chunked_choice["message"]
+        finally:
+            sock.close()
+    finally:
+        gw.close()
+
+
+def test_chunked_malformed_size_rejected(dev, eng4):
+    """A garbage chunk-size line is a 400, not a hang or a crash."""
+    gw, _server = _start_gateway(dev, eng4)
+    try:
+        sock = socket.create_connection(("127.0.0.1", gw.port),
+                                        timeout=180)
+        try:
+            sock.sendall(b"POST /v1/chat/completions HTTP/1.1\r\n"
+                         b"Host: t\r\n"
+                         b"Transfer-Encoding: chunked\r\n\r\n"
+                         b"zz\r\n")
+            status, _, body = _recv_response(sock)
+            assert status == 400
+            assert b"chunk size" in body
+        finally:
+            sock.close()
+        # the listener survives: a well-formed request still succeeds
+        status, _, body = _raw_request(gw.port, "GET", "/healthz")
+        assert status == 200 and json.loads(body)["status"] == "ok"
+    finally:
+        gw.close()
