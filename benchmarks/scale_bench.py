@@ -56,6 +56,13 @@ Three sweeps:
    replica already holding it, round-robin re-prefills it once per
    replica).
 
+7. **Stall-attribution sweep** (``stall_sweep``): the unified tracer
+   (serving/trace.py) attached at high concurrency on a tight pool,
+   host swap off and on.  Outputs are asserted byte-identical to an
+   untraced run (tracing is passive); reported per row are the
+   exclusive stall buckets and their shares of total stream wall time,
+   asserted to sum to it.
+
 Usage:
   PYTHONPATH=src:. python -m benchmarks.scale_bench [--fast] \
       [--streams 1,2,4,8] [--concurrency 8,32,128] \
@@ -63,6 +70,7 @@ Usage:
       [--preempt-concurrency 8,32,128] \
       [--cross-waves 3] [--cross-streams 2] \
       [--fleet-replicas 4] [--fleet-streams 64] \
+      [--stall-concurrency 8,32,128] \
       [--out benchmarks/BENCH_scale.json]
 
 Skipped sweeps ('' as the list) keep their previously written section
@@ -573,6 +581,82 @@ def run_fleet_sweep(replicas=(4,), streams: int = 64, max_new: int = 4,
                 suffix_tokens=suffix_tokens, rows=rows)
 
 
+def run_stall_sweep(concurrency=(8, 32, 128), max_new: int = 6,
+                    slots: int = 8, block_size: int = 8) -> dict:
+    """Stall-time attribution under load (ISSUE 10): each stream count
+    is served with the unified tracer attached (serving/trace.py) on a
+    paged pool tight enough to force queueing/preemption, with the host
+    swap tier off and on.
+
+    Reported per row: the fleet's exclusive stall buckets (device /
+    cloud / link / queue / batch_wait / swap / preempted / other) and
+    their shares of total stream wall time — asserted to sum to it
+    within float tolerance.  Tracing is passive: outputs are asserted
+    byte-identical to an untraced run on identical engine state.
+    """
+    from benchmarks import paper_claims as PC
+    from benchmarks.prepare import get_pair
+    from repro.core.offload import OffloadPolicy
+    from repro.serving import synergy as SY
+
+    BUCKETS = ("device", "cloud", "link", "queue", "batch_wait", "swap",
+               "preempted", "other")
+    slm_cfg, slm_p, llm_cfg, llm_p, task = get_pair()
+    dev = PC.make_device(slm_cfg, slm_p,
+                         policy=OffloadPolicy(mode="all"),
+                         use_early_exit=False)
+
+    rows = []
+    for n in concurrency:
+        evalset = PC.eval_set(task, n, seed=31)
+        prompts = [p for p, _ in evalset]
+        plen = max(len(p) for p in prompts)
+        # a tight pool: ~3 live streams' worth of blocks (preempt_sweep
+        # sizing) so oversubscription shows up in the wait/swap buckets
+        per_stream = -(-(plen + max_new + 8) // block_size) + 1
+        pool = 3 * per_stream
+        mk = lambda **kw: PC.make_engine(llm_cfg, llm_p, slots=slots,
+                                         cache_impl="paged",
+                                         block_size=block_size,
+                                         pool_blocks=pool, **kw)
+        # outputs are invariant across swap on/off (tested elsewhere),
+        # so one untraced run is the byte-identity reference for both
+        r_ref = SY.run_synera(dev, mk(), prompts, max_new, concurrency=n)
+        for swap in (False, True):
+            t0 = time.time()
+            r = SY.run_synera(dev, mk(swap=swap), prompts, max_new,
+                              concurrency=n, trace=True)
+            wall_s = time.time() - t0
+            assert r.outputs == r_ref.outputs, \
+                "tracing must not change greedy token streams"
+            st = r.extras["scheduler"]
+            wall = st["stall_wall_ms"]
+            buckets = {b: st[f"stall_{b}_ms"] for b in BUCKETS}
+            total = sum(buckets.values())
+            assert abs(total - wall) <= 1e-6 * max(1.0, wall), \
+                (total, wall)
+            rows.append(dict(
+                concurrency=n, swap=swap, pool_blocks=pool,
+                stall_wall_ms=wall,
+                buckets_ms=buckets,
+                bucket_shares={b: v / max(wall, 1e-9)
+                               for b, v in buckets.items()},
+                preemptions=st["preemptions"],
+                swap_evictions=st["swap_evictions"],
+                makespan_ms=st["sim_ms"],
+                wall_s=wall_s))
+            shares = rows[-1]["bucket_shares"]
+            print(f"conc={n:3d} swap={int(swap)} pool={pool:3d} "
+                  f"device={shares['device']:.0%} "
+                  f"cloud={shares['cloud']:.0%} "
+                  f"wait={shares['batch_wait']:.0%} "
+                  f"queue={shares['queue']:.0%} "
+                  f"swap={shares['swap']:.0%} "
+                  f"preempt={shares['preempted']:.0%}", flush=True)
+    return dict(slots=slots, max_new=max_new, block_size=block_size,
+                rows=rows)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
@@ -598,6 +682,10 @@ def main():
                          "sweep ('' to skip)")
     ap.add_argument("--fleet-streams", type=int, default=64,
                     help="streams per fleet-sweep row")
+    ap.add_argument("--stall-concurrency", default="8,32,128",
+                    help="stream counts for the traced stall-"
+                         "attribution sweep, swap off/on per count "
+                         "('' to skip)")
     ap.add_argument("--slots", type=int, default=8)
     ap.add_argument("--block-size", type=int, default=8)
     ap.add_argument("--out", default="benchmarks/BENCH_scale.json")
@@ -643,6 +731,11 @@ def main():
             streams=16 if args.fast else args.fleet_streams,
             block_size=args.block_size,
             prefix_blocks=args.prefix_blocks)
+    if args.stall_concurrency:
+        conc = tuple(int(s) for s in args.stall_concurrency.split(","))
+        res["stall_sweep"] = run_stall_sweep(
+            concurrency=conc, max_new=4 if args.fast else 6,
+            slots=args.slots, block_size=args.block_size)
     with open(args.out, "w") as f:
         json.dump(res, f, indent=2)
     print(f"wrote {args.out}")

@@ -177,11 +177,26 @@ def main():
                          "wall-clock latencies track the modeled "
                          "schedule (default: serve at host speed, "
                          "modeled time as a shadow cross-check)")
+    ap.add_argument("--trace", action="store_true",
+                    help="attach the unified tracer (serving/trace.py): "
+                         "per-stream lifecycle spans + stall-time "
+                         "attribution into /metrics and the summary; "
+                         "token streams are byte-identical either way "
+                         "(synera/hybrid modes; also --http, where the "
+                         "gateway serves /v1/traces)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write the Perfetto/Chrome trace-event JSON to "
+                         "PATH after the run (implies --trace); load it "
+                         "at ui.perfetto.dev")
     args = ap.parse_args()
+    trace_on = args.trace or bool(args.trace_out)
     if args.concurrency < 0:
         ap.error("--concurrency must be >= 0 (0 = unbounded)")
     if args.http and args.mode != "synera":
         ap.error("--http serves the synera pipeline (--mode synera)")
+    if trace_on and args.mode not in ("synera", "hybrid"):
+        ap.error("--trace/--trace-out require --mode synera or hybrid "
+                 "(only the SyneraServer event loop is instrumented)")
     if args.replicas < 1:
         ap.error("--replicas must be >= 1")
     if args.replicas > 1 and args.mode != "synera":
@@ -263,24 +278,30 @@ def main():
         from repro.serving.gateway import Gateway, GatewayConfig
         from repro.serving.link import RealClock
         from repro.serving.server import SyneraServer, build_fleet
+        from repro.serving.trace import Tracer
+        clock = RealClock(pace=args.wall_pace)
+        tracer = Tracer(clock) if trace_on else None
         if args.replicas > 1:
             from repro.serving.router import ReplicaRouter
-            servers = build_fleet(dev, engines,
-                                  clock=RealClock(pace=args.wall_pace),
+            servers = build_fleet(dev, engines, clock=clock,
                                   preempt_policy=args.preempt_policy,
-                                  clamp_arrivals=not args.wall_pace)
+                                  clamp_arrivals=not args.wall_pace,
+                                  tracer=tracer)
             server = ReplicaRouter(servers, policy=args.route_policy,
                                    replica_queue_cap=args.replica_queue_cap)
         else:
-            server = SyneraServer(dev, eng,
-                                  clock=RealClock(pace=args.wall_pace),
+            server = SyneraServer(dev, eng, clock=clock,
                                   preempt_policy=args.preempt_policy,
-                                  clamp_arrivals=not args.wall_pace)
+                                  clamp_arrivals=not args.wall_pace,
+                                  tracer=tracer)
         Gateway(server, GatewayConfig(
             host=args.host, port=args.port,
             max_new_default=args.max_new,
             max_active=args.max_active,
             queue_cap=args.queue_cap)).run_forever()
+        if args.trace_out and tracer is not None:
+            print(f"trace written to {tracer.export(args.trace_out)}",
+                  file=sys.stderr)
         return
 
     def run_synera_batch():
@@ -290,10 +311,11 @@ def main():
                 policy=args.route_policy,
                 replica_queue_cap=args.replica_queue_cap,
                 concurrency=concurrency, arrivals=arrivals,
-                preempt_policy=args.preempt_policy)
+                preempt_policy=args.preempt_policy, trace=trace_on)
         return SY.run_synera(dev, eng, prompts, args.max_new,
                              concurrency=concurrency, arrivals=arrivals,
-                             preempt_policy=args.preempt_policy)
+                             preempt_policy=args.preempt_policy,
+                             trace=trace_on)
 
     run = {
         "synera": run_synera_batch,
@@ -303,7 +325,8 @@ def main():
         "hybrid": lambda: SY.run_hybrid(dev, eng, prompts, args.max_new,
                                         concurrency=concurrency,
                                         arrivals=arrivals,
-                                        preempt_policy=args.preempt_policy),
+                                        preempt_policy=args.preempt_policy,
+                                        trace=trace_on),
         "edgefm": lambda: SY.run_edgefm(dev, eng, prompts, args.max_new,
                                         link=link),
     }[args.mode]
@@ -366,9 +389,25 @@ def main():
                 degraded_streams=sched["degraded_streams"],
                 rerouted_sessions=sched["rerouted_sessions"],
                 dead_replicas=sched["dead_replicas"])
+        if sched.get("trace"):
+            summary.update(
+                trace=True,
+                stall_wall_ms=sched["stall_wall_ms"],
+                stall_device_ms=sched["stall_device_ms"],
+                stall_cloud_ms=sched["stall_cloud_ms"],
+                stall_link_ms=sched["stall_link_ms"],
+                stall_queue_ms=sched["stall_queue_ms"],
+                stall_batch_wait_ms=sched["stall_batch_wait_ms"],
+                stall_swap_ms=sched["stall_swap_ms"],
+                stall_preempted_ms=sched["stall_preempted_ms"],
+                stall_other_ms=sched["stall_other_ms"])
     summary.update(
         engine_host_bytes=eng.bytes_to_host,
         engine_specializations=eng.compile_stats["n_specializations"])
+    if args.trace_out:
+        tracer = r.extras.get("tracer")
+        if tracer is not None:
+            summary["trace_out"] = tracer.export(args.trace_out)
     if args.json:
         print(json.dumps(summary))
     else:

@@ -43,7 +43,8 @@ from repro.core.offload import OffloadPolicy
 from repro.core.profiling import ChunkRecord
 from repro.models import layers as L
 from repro.models import model as M
-from repro.serving.link import DeviceLatencyModel, LinkModel, Timeline
+from repro.serving.link import DeviceLatencyModel, LinkModel
+from repro.serving.trace import StreamTimeline as Timeline
 
 
 @dataclass
@@ -79,6 +80,10 @@ class CloudReply:
     result: object = None         # VerifyResult
     cloud_ms: float = 0.0
     fed_tokens: int = 0           # tokens this request fed the cloud LLM
+    # chronological (category, ms) decomposition of the request's
+    # in-flight window at the cloud (Tracer.window_parts); None when
+    # tracing is off — the stall then lands in the "other" bucket
+    cloud_parts: list | None = None
 
 
 @dataclass
@@ -283,7 +288,7 @@ class DeviceRuntime:
 
     def generate_steps(self, prompt: list[int], max_new: int, *,
                        use_cloud: bool = True, profile_mode: bool = False,
-                       emit=None):
+                       emit=None, trace=None):
         """Device generation as a resumable coroutine.
 
         Yields a :class:`CloudCall` whenever the stream needs the cloud;
@@ -300,6 +305,13 @@ class DeviceRuntime:
         ``seq`` only ever grows (rejected drafts never enter it), so
         emitted tokens are final: their concatenation is byte-identical
         to the returned ``DeviceMetrics.tokens``.
+
+        ``trace(name, t0_ms, t1_ms)`` is the optional tracing hook
+        (serving/trace.py): it receives stream-relative device-side
+        spans — ``draft`` (SLM compute), ``pi_overlap`` (speculation
+        masking a round trip), ``stall`` (unmasked round-trip tail).
+        Tracing is passive; timings and tokens are identical with it on
+        or off.
 
         All device-side state (KV cache, accepted stream, timeline) lives
         in this generator's frame, so one ``DeviceRuntime`` (weights +
@@ -326,6 +338,9 @@ class DeviceRuntime:
         _, cache = self._prefill(self.params, cache, tk, pos)
         m.timeline.advance(self.latency.draft_ms(T - 1, 1.0), "compute")
         m.timeline.energy_j += self.latency.energy_j(T - 1, 1.0)
+        t_mark = m.timeline.t_ms   # device time already emitted as spans
+        if trace is not None:
+            trace("prompt_feed", 0.0, t_mark)
 
         if use_cloud:
             up = 4 * T + 32
@@ -418,6 +433,11 @@ class DeviceRuntime:
                 pi_state = PI.PIState(r_star=r_star, alt_token=alt,
                                       tokens=spec)
             overlap_ms = m.timeline.t_ms - overlap_t0
+            if trace is not None:
+                if overlap_t0 > t_mark:
+                    trace("draft", t_mark, overlap_t0)
+                if overlap_ms > 0.0:
+                    trace("pi_overlap", overlap_t0, m.timeline.t_ms)
 
             # ---- cloud round trip ---------------------------------------
             reply = yield CloudCall("verify", send_ms=overlap_t0,
@@ -428,14 +448,18 @@ class DeviceRuntime:
             m.n_cloud_fed_tokens += reply.fed_tokens
             down_bytes = 32 + 4 * (len(result.tokens) + 1)
             m.downlink_bytes += down_bytes
-            rtt_ms = (uplink_ms + cloud_ms
-                      + self.link.transfer_ms(down_bytes))
+            down_ms = self.link.transfer_ms(down_bytes)
+            rtt_ms = uplink_ms + cloud_ms + down_ms
 
             # PI compute overlapped with the round trip; only the excess
             # round-trip time stalls the pipeline (Fig 6).
             stall_ms = max(rtt_ms - overlap_ms, 0.0)
-            m.timeline.advance(stall_ms, "stall")
+            if trace is not None and stall_ms > 0.0:
+                trace("stall", m.timeline.t_ms, m.timeline.t_ms + stall_ms)
+            m.timeline.advance_stall(stall_ms, uplink_ms, reply.cloud_parts,
+                                     down_ms, overlap_ms)
             m.timeline.comm_ms += min(rtt_ms, overlap_ms)  # masked comm
+            t_mark = m.timeline.t_ms
 
             n_acc = result.n_accepted
             verified = list(result.tokens)  # accepted prefix + corrected/bonus
@@ -469,6 +493,8 @@ class DeviceRuntime:
 
         m.tokens = seq[T:T + max_new]
         _flush_emit()
+        if trace is not None and m.timeline.t_ms > t_mark:
+            trace("draft", t_mark, m.timeline.t_ms)
         return m
 
     # ------------------------------------------------------------------

@@ -49,6 +49,7 @@ import jax.numpy as jnp
 from repro.models import model as M
 from repro.models.steps import (make_cloud_decode_step, make_cloud_verify_step,
                                 make_decode_step, make_verify_step)
+from repro.serving.trace import NULL_TRACER
 
 DEFAULT_FEED_BUCKETS = (8, 16, 32, 64, 128, 256)
 
@@ -135,6 +136,11 @@ class BlockAllocator:
         # must invalidate before the next write (see take_reclaimed)
         self._reclaim_pending: list[int] = []
         # telemetry
+        # tracing handle (serving/trace.py): installed by the scheduler
+        # when tracing is on; the NULL_TRACER default keeps every
+        # ``if self.tracer.enabled`` guard below allocation-free
+        self.tracer = NULL_TRACER
+        self.trace_replica = 0
         self.dedupe_hit_blocks = 0   # cumulative blocks adopted via index
         self.cow_copies = 0          # cumulative copy-on-write forks
         self.shadow_promotions = 0   # duplicates promoted to primary
@@ -216,6 +222,9 @@ class BlockAllocator:
         if bid in self._cached:
             del self._cached[bid]
             self.revived_blocks += 1
+            if self.tracer.enabled:
+                self.tracer.instant("prefix_revive",
+                                    replica=self.trace_replica, slot=slot)
         j = int(self.n_blocks_of[slot])
         self.table[slot, j] = bid
         self.ref[bid] += 1
@@ -322,6 +331,10 @@ class BlockAllocator:
         for b in bids:
             self.map_block(slot, b)
         self.dedupe_hit_blocks += len(bids)
+        if bids and self.tracer.enabled:
+            self.tracer.instant("prefix_adopt",
+                                replica=self.trace_replica, slot=slot,
+                                n=len(bids))
 
     def chain_of(self, bid: int):
         """Registration record of a block: ``(chain_hash, prev_hash,
@@ -472,6 +485,10 @@ class BlockAllocator:
                 self.ref[dst] = 1
                 self.table[slot, i] = dst
                 self.cow_copies += 1
+                if self.tracer.enabled:
+                    self.tracer.instant("cow_fork",
+                                        replica=self.trace_replica,
+                                        slot=slot)
                 pairs.append((bid, dst))
             elif bid in self._rindex:
                 self._unregister(bid)

@@ -188,6 +188,25 @@ class Gateway:
                         f.done() or f.set_result(s))
                 except RuntimeError:
                     pass
+            elif kind == "trace":
+                # trace snapshot rendered on the engine thread for the
+                # same reason as stats: the tracer's buffers are only
+                # ever appended to there, so /v1/traces never races a
+                # step() in progress
+                loop, fut = st
+                tr = getattr(self.server, "tracer", None)
+                if tr is not None and getattr(tr, "enabled", False):
+                    snap = tr.to_dict()
+                    snap["enabled"] = True
+                else:
+                    snap = {"enabled": False, "traceEvents": [],
+                            "displayTimeUnit": "ms"}
+                try:
+                    loop.call_soon_threadsafe(
+                        lambda f=fut, s=snap:
+                        f.done() or f.set_result(s))
+                except RuntimeError:
+                    pass
 
     def _cancel(self, st: _Stream) -> None:
         st.dead = True
@@ -359,6 +378,20 @@ class Gateway:
                     200, P.metrics_text(stats).encode(),
                     content_type="text/plain; version=0.0.4",
                     keep_alive=keep))
+        elif hreq.path == "/v1/traces":
+            # Chrome/Perfetto trace-event snapshot of everything the
+            # tracer has recorded so far; {"enabled": false} when the
+            # gateway was started without --trace
+            loop = asyncio.get_running_loop()
+            fut = loop.create_future()
+            self._submit(("trace", (loop, fut)))
+            try:
+                trace = await asyncio.wait_for(fut, timeout=10)
+            except asyncio.TimeoutError:
+                trace = {"enabled": False, "traceEvents": [],
+                         "error": "engine busy; retry"}
+            writer.write(H.response(200, json.dumps(trace).encode(),
+                                    keep_alive=keep))
         else:
             writer.write(H.response(404, b'{"error":"not found"}',
                                     keep_alive=keep))

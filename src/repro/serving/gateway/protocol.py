@@ -134,16 +134,34 @@ def sse_event(data: dict) -> bytes:
         data, separators=(",", ":")).encode() + b"\n\n"
 
 
+def _hist_lines(name: str, h: dict, out: list) -> None:
+    """Render one cumulative histogram (serving/trace.py ``hist_*``
+    shape: ``{"le": (...), "buckets": [...], "sum": s}``) as standard
+    Prometheus ``_bucket``/``_sum``/``_count`` samples.  ``buckets`` is
+    already cumulative; its last entry is the +Inf bucket == count."""
+    out.append(f"# TYPE {name} histogram")
+    for le, c in zip(h["le"], h["buckets"]):
+        out.append(f'{name}_bucket{{le="{float(le):g}"}} {c}')
+    out.append(f'{name}_bucket{{le="+Inf"}} {h["buckets"][-1]}')
+    out.append(f'{name}_sum {h["sum"]}')
+    out.append(f'{name}_count {h["buckets"][-1]}')
+
+
 def metrics_text(stats: dict, prefix: str = "synera_") -> str:
     """Prometheus-style text exposition of a flat stats dict: numeric
     fields become ``<prefix><name> <value>`` samples, booleans 0/1,
-    strings become info comments."""
+    ``hist_*`` dicts become real histograms (``_bucket``/``_sum``/
+    ``_count``), strings become info comments."""
     lines = []
     for k, v in sorted(stats.items()):
         if isinstance(v, bool):
             lines.append(f"{prefix}{k} {int(v)}")
         elif isinstance(v, (int, float)):
             lines.append(f"{prefix}{k} {v}")
+        elif (isinstance(v, dict) and "le" in v and "buckets" in v
+              and "sum" in v):
+            name = k[5:] if k.startswith("hist_") else k
+            _hist_lines(f"{prefix}{name}", v, lines)
         else:
             lines.append(f"# {prefix}{k}: {v}")
     return "\n".join(lines) + "\n"

@@ -174,22 +174,7 @@ class CostModel:
         return (1.0 / self.packing_factor) * avg_tbt_ms * cloud_token_frac
 
 
-@dataclass
-class Timeline:
-    """Accumulates simulated wall-clock per request stream."""
-    t_ms: float = 0.0
-    stall_ms: float = 0.0
-    compute_ms: float = 0.0
-    comm_ms: float = 0.0
-    energy_j: float = 0.0
-    events: list = field(default_factory=list)
-
-    def advance(self, dt: float, kind: str):
-        self.t_ms += dt
-        if kind == "stall":
-            self.stall_ms += dt
-        elif kind == "compute":
-            self.compute_ms += dt
-        elif kind == "comm":
-            self.comm_ms += dt
-        self.events.append((kind, dt))
+# Back-compat alias: the per-stream timeline moved to serving/trace.py,
+# where it gained exclusive stall-attribution buckets in place of the
+# old unstructured ``events`` tuple list.
+from repro.serving.trace import StreamTimeline as Timeline  # noqa: E402

@@ -55,6 +55,7 @@ import numpy as np
 
 from repro.serving.server import (DONE, DeviceSession, ServerStats,
                                   SyneraServer, aggregate_server_stats)
+from repro.serving.trace import hist_add
 
 ROUTE_POLICIES = ("round-robin", "least-loaded", "prefix-affinity")
 
@@ -78,6 +79,10 @@ class ReplicaRouter:
         self.replicas = list(replicas)
         self.device = replicas[0].device
         self.clock = replicas[0].clock
+        # one tracer serves the fleet (build_fleet hands the same
+        # instance to every replica); router-level events — degrades,
+        # reroutes, replica kills — stamp through it
+        self.tracer = replicas[0].tracer
         self.policy = policy
         # live sessions a replica may hold before it counts as saturated
         # (0 = unbounded; saturation of ALL replicas => degrade-to-device)
@@ -185,6 +190,12 @@ class ReplicaRouter:
         self.degraded_streams += 1
         start = self.clock.now_ms if arrival_ms is None else arrival_ms
         s = DeviceSession(sid=-1, gen=None, client=None, start_ms=start)
+        if self.tracer.enabled:
+            self.tracer.instant("degrade", start)
+            s.trace_uid = self.tracer.stream_begin(
+                "stream", start,
+                meta={"degraded": True, "prompt_tokens": len(prompt),
+                      "max_new": max_new})
 
         def _emit(tokens, t_ms, _s=s, _user=emit):
             if _s.ttft_ms is None:
@@ -205,6 +216,13 @@ class ReplicaRouter:
             s.metrics = e.value
             s.e2e_ms = e.value.timeline.t_ms
             s.state = DONE
+            if self.tracer.enabled and s.trace_uid >= 0:
+                tl = e.value.timeline
+                self.tracer.stream_end(
+                    s.trace_uid, start + tl.t_ms,
+                    meta={"wall_ms": tl.t_ms,
+                          "tokens": len(e.value.tokens),
+                          "buckets": tl.buckets()})
         self.owner[id(s)] = -1
         return s
 
@@ -235,6 +253,8 @@ class ReplicaRouter:
         srv = self.replicas[idx]
         if hasattr(srv.engine, "mark_dead"):
             srv.engine.mark_dead()
+        if self.tracer.enabled:
+            self.tracer.instant("replica_kill", replica=idx)
         moved = 0
         for s in [x for x in srv.sessions if not x.done]:
             pending = srv.export_session(s)
@@ -242,6 +262,9 @@ class ReplicaRouter:
             target = self._place_failover(probe)
             self.replicas[target].import_session(s, pending)
             self.owner[id(s)] = target
+            if self.tracer.enabled and s.trace_uid >= 0:
+                self.tracer.stream_instant(s.trace_uid, "reroute",
+                                           self.clock.now_ms, n=target)
             moved += 1
         self.rerouted_sessions += moved
         return moved
@@ -328,10 +351,33 @@ class ReplicaRouter:
         agg.degraded_streams = self.degraded_streams
         agg.rerouted_sessions = self.rerouted_sessions
         agg.affinity_hits = self.affinity_hits
-        # degraded sessions belong to no replica; fold them in here
-        agg.completed_streams += sum(
-            1 for s in self.sessions
-            if self.owner.get(id(s)) == -1 and s.done and not s.cancelled)
+        # degraded sessions belong to no replica; fold them in here —
+        # completion count, stall buckets (device-only: pure compute)
+        # and latency histogram samples alike
+        for s in self.sessions:
+            if not (self.owner.get(id(s)) == -1 and s.done
+                    and not s.cancelled):
+                continue
+            agg.completed_streams += 1
+            if s.metrics is not None:
+                tl = s.metrics.timeline
+                agg.stall_wall_ms += tl.t_ms
+                agg.stall_device_ms += tl.compute_ms
+                agg.stall_cloud_ms += tl.cloud_ms
+                agg.stall_link_ms += tl.link_ms
+                agg.stall_queue_ms += tl.queue_ms
+                agg.stall_batch_wait_ms += tl.batch_wait_ms
+                agg.stall_swap_ms += tl.swap_ms
+                agg.stall_preempted_ms += tl.preempted_ms
+                agg.stall_other_ms += tl.other_ms
+            if s.ttft_ms is not None:
+                hist_add(agg.hist_ttft_ms, s.ttft_ms)
+            if s.e2e_ms is not None:
+                hist_add(agg.hist_e2e_ms, s.e2e_ms)
+            if (s.ttft_ms is not None and s.e2e_ms is not None
+                    and s.n_emitted > 1):
+                hist_add(agg.hist_tpot_ms,
+                         (s.e2e_ms - s.ttft_ms) / (s.n_emitted - 1))
         agg.queue_depth += self.ext_queue_depth
         agg.rejected_requests += self.rejected_requests
         return agg

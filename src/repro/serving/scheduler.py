@@ -61,6 +61,7 @@ from repro.core import verifier as V
 from repro.serving.engine import CloudEngine
 from repro.serving.link import CloudLatencyModel, SimClock
 from repro.serving.swap import PREEMPT_POLICIES, pick_victim
+from repro.serving.trace import NULL_TRACER
 
 
 @dataclass
@@ -116,10 +117,25 @@ class VerificationAwareScheduler:
                  rng: np.random.Generator | None = None,
                  clock: SimClock | None = None,
                  fused: bool = True,
-                 preempt_policy: str | None = None):
+                 preempt_policy: str | None = None,
+                 tracer=None, replica: int = 0):
         self.engine = engine
         self.chunk = chunk
         self.fused = fused
+        # tracing (serving/trace.py): every clock charge below becomes a
+        # typed span tagged with the request ids / slot it served; the
+        # NULL_TRACER default keeps the disabled path allocation-free
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.replica = replica
+        if self.tracer.enabled:
+            alloc = getattr(engine, "allocator", None)
+            if alloc is not None:
+                alloc.tracer = self.tracer
+                alloc.trace_replica = replica
+            swp = getattr(engine, "swap_manager", None)
+            if swp is not None:
+                swp.tracer = self.tracer
+                swp.trace_replica = replica
         policy = (preempt_policy
                   or getattr(getattr(engine, "cfg", None),
                              "preempt_policy", None)
@@ -225,8 +241,13 @@ class VerificationAwareScheduler:
         if self.swap is not None:
             # exit-time demotion to the content-addressed host store is
             # a D2H peek: charge it to the modeled link
-            self.clock.advance(self.latency.host_transfer_ms(
-                self.swap.take_uncharged()))
+            nbytes = self.swap.take_uncharged()
+            t0 = self.clock.now_ms
+            self.clock.advance(self.latency.host_transfer_ms(nbytes))
+            if self.tracer.enabled and nbytes:
+                self.tracer.span(t0, self.clock.now_ms, "swap_demote",
+                                 replica=self.replica, slot=slot,
+                                 nbytes=nbytes)
         self.cloud_len[slot] = 0
         self.slot_age[slot] = -1
         self.free_slots.append(slot)   # FIFO: reuse round-robins over rows
@@ -299,7 +320,11 @@ class VerificationAwareScheduler:
                    + [r.arrival_ms for r in self.verify_q])
                   if a > now]
         if future:
+            t0 = self.clock.now_ms
             self.clock.advance_to(min(future))
+            if self.tracer.enabled and self.clock.now_ms > t0:
+                self.tracer.span(t0, self.clock.now_ms, "idle",
+                                 replica=self.replica)
         return []
 
     # -- prefill (lines 5-11) ------------------------------------------
@@ -408,6 +433,7 @@ class VerificationAwareScheduler:
         # one full-vocab row per slot crosses to the host here (the
         # sampling verifier's pre-draft row); verify iterations never
         # transfer a vocab-sized tensor
+        t_exec0 = self.clock.now_ms
         b0 = getattr(self.engine, "bytes_to_host", 0)
         last_rows = self.engine.prefill(tokens, positions)
         moved = getattr(self.engine, "bytes_to_host", 0) - b0
@@ -422,6 +448,11 @@ class VerificationAwareScheduler:
         self.clock.advance(self.latency.prefill_ms(total)
                            + self.latency.host_transfer_ms(moved + adopted))
         self.prefill_iterations += 1
+        if self.tracer.enabled:
+            self.tracer.span(t_exec0, self.clock.now_ms, "prefill",
+                             replica=self.replica,
+                             rids=tuple(r.req_id for r in batch),
+                             tokens=total, nbytes=moved + adopted)
         for r in batch:
             T = len(r.tokens)
             self.cloud_len[r.slot] = T
@@ -488,8 +519,13 @@ class VerificationAwareScheduler:
             # every admissible chunk was preempted away: charge the
             # scheduling work so the shared clock (and the server's
             # stall detector) sees progress, and retry next iteration
+            t0 = self.clock.now_ms
             self.clock.advance(self.latency.ms_scheduler)
+            if self.tracer.enabled:
+                self.tracer.span(t0, self.clock.now_ms, "sched",
+                                 replica=self.replica)
             return None
+        t_exec0 = self.clock.now_ms
         b0 = getattr(self.engine, "bytes_to_host", 0)
         if self.fused:
             need_dists = any(r.sampling != "greedy" for r, _, _ in feeding)
@@ -504,6 +540,11 @@ class VerificationAwareScheduler:
         self.verify_iterations += 1
         self.verify_occupancy.append(len(feeding))
         self.verify_tokens_fed.append(total)
+        if self.tracer.enabled:
+            self.tracer.span(t_exec0, self.clock.now_ms, "verify",
+                             replica=self.replica,
+                             rids=tuple(r.req_id for r, _, _ in feeding),
+                             tokens=total, nbytes=moved)
 
         events = []
         for req, fed0, n in feeding:
@@ -679,6 +720,7 @@ class VerificationAwareScheduler:
                 break
             victim = pick_victim(self.preempt_policy, cands, self)
             before = alloc.allocatable_blocks()
+            t0 = self.clock.now_ms
             moved = self.swap.swap_out(victim, self.slot_prompt.get(victim),
                                        int(self.cloud_len[victim]))
             if moved is None:
@@ -686,6 +728,12 @@ class VerificationAwareScheduler:
             self.swap_evictions += 1
             self.admission_swaps += 1
             self.clock.advance(self.latency.host_transfer_ms(moved))
+            if self.tracer.enabled:
+                self.tracer.span(t0, self.clock.now_ms, "swap_out",
+                                 replica=self.replica, slot=victim,
+                                 nbytes=moved)
+                self.tracer.instant("admission_swap", replica=self.replica,
+                                    slot=victim)
             deficit -= alloc.allocatable_blocks() - before
             freed_any = True
         return freed_any
@@ -716,12 +764,18 @@ class VerificationAwareScheduler:
                                      * alloc.block_size)
                 redo_ms = self.latency.refeed_ms(max(0, redo), self.chunk)
                 if swap_ms < redo_ms or not self._slot_restartable(slot):
+                    t0 = self.clock.now_ms
                     moved = self.swap.swap_out(
                         slot, self.slot_prompt.get(slot), frontier)
                     if moved is not None:
                         self.swap_evictions += 1
                         self.clock.advance(
                             self.latency.host_transfer_ms(moved))
+                        if self.tracer.enabled:
+                            self.tracer.span(
+                                t0, self.clock.now_ms, "swap_out",
+                                replica=self.replica, slot=slot,
+                                nbytes=moved)
                         for entry in feeding:
                             if entry[0].slot == slot:
                                 self._withdraw(entry, feeding, tokens,
@@ -751,11 +805,19 @@ class VerificationAwareScheduler:
             res = self.swap.swap_in(slot)
             if res is None:
                 self.swap_expirations += 1
+                if self.tracer.enabled:
+                    self.tracer.instant("swap_expire",
+                                        replica=self.replica, slot=slot)
                 self._rewind_slot(slot)
                 continue
             frontier, nbytes = res
             self.cloud_len[slot] = frontier
+            t0 = self.clock.now_ms
             self.clock.advance(self.latency.host_transfer_ms(nbytes))
+            if self.tracer.enabled:
+                self.tracer.span(t0, self.clock.now_ms, "swap_in",
+                                 replica=self.replica, slot=slot,
+                                 nbytes=nbytes)
 
     def _rewind_slot(self, slot: int) -> None:
         """Recompute-eviction bookkeeping: cloud frontier rewinds and
@@ -767,6 +829,12 @@ class VerificationAwareScheduler:
         self.last_row.pop(slot, None)
         reqs = [r for r in list(self.active_verify) + list(self.verify_q)
                 if r.slot == slot]
+        if self.tracer.enabled:
+            # the rewind instant marks every serving span of these
+            # requests before this point as wasted work ("preempted"
+            # bucket in the stall attribution)
+            self.tracer.instant("rewind", replica=self.replica, slot=slot,
+                                rids=tuple(r.req_id for r in reqs))
         shared = 0
         if reqs and reqs[0].seq is not None:
             # the earliest request's seq is a prefix of every later one;
@@ -788,6 +856,8 @@ class VerificationAwareScheduler:
         """Recompute-evict ``slot``: blocks back to the pool, cloud
         frontier to 0, pending requests rewound to refeed from scratch;
         if the slot was in the current batch, its chunk is withdrawn."""
+        if self.tracer.enabled:
+            self.tracer.instant("preempt", replica=self.replica, slot=slot)
         self.engine.reset_slot(slot)            # frees + invalidates blocks
         self._rewind_slot(slot)
         for entry in feeding:
@@ -855,10 +925,15 @@ class VerificationAwareScheduler:
     def decode_iteration(self, tokens: np.ndarray, positions: np.ndarray):
         """tokens/positions: (max_slots, 1); position -1 = idle slot.
         Returns the engine's fused DecodeRows (argmax + top-k support)."""
+        t0 = self.clock.now_ms
         b0 = getattr(self.engine, "bytes_to_host", 0)
         rows = self.engine.decode(tokens, positions)
         moved = getattr(self.engine, "bytes_to_host", 0) - b0
         active = int((positions >= 0).sum())
         self.clock.advance(self.latency.iteration_ms(active)
                            + self.latency.host_transfer_ms(moved))
+        if self.tracer.enabled:
+            self.tracer.span(t0, self.clock.now_ms, "decode",
+                             replica=self.replica, tokens=active,
+                             nbytes=moved)
         return rows

@@ -49,6 +49,7 @@ from repro.serving.engine import CloudEngine
 from repro.serving.link import CloudLatencyModel, SimClock
 from repro.serving.scheduler import VerificationAwareScheduler
 from repro.serving.synergy import CloudClient
+from repro.serving.trace import NULL_TRACER, hist_from, hist_merge, hist_new
 
 RUNNING = "running"
 WAIT_SLOT = "wait_slot"    # verify ready but prompt prefill not yet done
@@ -146,6 +147,23 @@ class ServerStats:
     degraded_streams: int = 0          # device-only completions (saturation)
     rerouted_sessions: int = 0         # sessions re-placed after replica death
     affinity_hits: int = 0             # placements that matched a cached prefix
+    # -- stall attribution (serving/trace.py; completed streams only) --
+    # exclusive buckets summed over completed streams' StreamTimelines;
+    # they sum to stall_wall_ms (the summed end-to-end stream time)
+    trace: bool = False                # tracer attached to this run
+    stall_wall_ms: float = 0.0         # sum of completed streams' e2e time
+    stall_device_ms: float = 0.0       # on-device SLM compute
+    stall_cloud_ms: float = 0.0        # cloud iterations serving the stream
+    stall_link_ms: float = 0.0         # unmasked WAN transfer
+    stall_queue_ms: float = 0.0        # admission queueing before prefill
+    stall_batch_wait_ms: float = 0.0   # behind other streams' iterations
+    stall_swap_ms: float = 0.0         # host-swap transfers on the slot
+    stall_preempted_ms: float = 0.0    # serving work a rewind threw away
+    stall_other_ms: float = 0.0        # unattributed (tracing off / host)
+    # -- latency histograms (Prometheus ladder; gateway /metrics) --
+    hist_ttft_ms: dict = field(default_factory=hist_new)
+    hist_tpot_ms: dict = field(default_factory=hist_new)
+    hist_e2e_ms: dict = field(default_factory=hist_new)
 
     def as_dict(self) -> dict:
         return asdict(self)
@@ -169,6 +187,8 @@ class DeviceSession:
     ttft_ms: float | None = None   # stream-relative time of first emit
     e2e_ms: float | None = None    # stream-relative completion time
     n_emitted: int = 0             # output tokens emitted so far
+    trace_uid: int = -1            # tracer stream id (-1 when tracing off)
+    trace_send_ms: float = 0.0     # absolute send time of in-flight verify
 
     @property
     def done(self) -> bool:
@@ -183,14 +203,23 @@ class SyneraServer:
                  latency: CloudLatencyModel | None = None,
                  clock: SimClock | None = None,
                  preempt_policy: str | None = None,
-                 clamp_arrivals: bool = False):
+                 clamp_arrivals: bool = False,
+                 tracer=None, replica: int = 0):
         self.device = device
         self.engine = engine
         self.sampling = sampling
         self.clock = clock or SimClock()
+        # tracing (serving/trace.py): the tracer must live on the same
+        # clock, or its timestamps would be on a different axis than the
+        # events it records
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.replica = replica
+        if self.tracer.enabled and self.tracer.clock is not self.clock:
+            raise ValueError("tracer and server must share one clock")
         self.sched = VerificationAwareScheduler(
             engine, chunk=chunk, latency=latency, clock=self.clock,
-            preempt_policy=preempt_policy)
+            preempt_policy=preempt_policy, tracer=self.tracer,
+            replica=replica)
         self.sessions: list[DeviceSession] = []
         self._by_req: dict[int, tuple[DeviceSession, str]] = {}
         self._fresh: deque[DeviceSession] = deque()  # opened, not yet run
@@ -223,17 +252,33 @@ class SyneraServer:
         client = CloudClient(self.sched, sampling=self.sampling, slo=slo)
         s = DeviceSession(sid=len(self.sessions), gen=None, client=client,
                           start_ms=start, slo=slo)
+        tr = self.tracer
+        trace_cb = None
+        if tr.enabled:
+            s.trace_uid = tr.stream_begin(
+                "stream", start, replica=self.replica,
+                meta={"sid": s.sid, "replica": self.replica,
+                      "prompt_tokens": len(prompt), "max_new": max_new})
 
-        def _emit(tokens, t_ms, _s=s, _user=emit):
+            def trace_cb(name, a, b, _tr=tr, _uid=s.trace_uid, _t0=start):
+                _tr.stream_child(_uid, name, _t0 + a, _t0 + b)
+
+        def _emit(tokens, t_ms, _s=s, _user=emit, _tr=tr):
             if _s.ttft_ms is None:
                 _s.ttft_ms = t_ms
+                if _tr.enabled and _s.trace_uid >= 0:
+                    _tr.stream_instant(_s.trace_uid, "first_token",
+                                       _s.start_ms + t_ms, n=len(tokens))
+            elif _tr.enabled and _s.trace_uid >= 0:
+                _tr.stream_instant(_s.trace_uid, "emit",
+                                   _s.start_ms + t_ms, n=len(tokens))
             _s.n_emitted += len(tokens)
             if _user is not None:
                 _user(tokens, t_ms)
 
         s.gen = self.device.generate_steps(prompt, max_new, use_cloud=True,
                                            profile_mode=profile_mode,
-                                           emit=_emit)
+                                           emit=_emit, trace=trace_cb)
         self.sessions.append(s)
         self._fresh.append(s)
         return s
@@ -253,6 +298,8 @@ class SyneraServer:
                                     arrival_ms=arr)
         self._by_req[rid] = (s, "verify")
         s.arrival_abs_ms = arr
+        if self.tracer.enabled:
+            s.trace_send_ms = s.start_ms + call.send_ms
         s.state = WAIT_CLOUD
 
     def _advance(self, s: DeviceSession, reply) -> None:
@@ -265,6 +312,13 @@ class SyneraServer:
                 s.e2e_ms = e.value.timeline.t_ms
                 s.state = DONE
                 self._done_count += 1
+                if self.tracer.enabled and s.trace_uid >= 0:
+                    tl = e.value.timeline
+                    self.tracer.stream_end(
+                        s.trace_uid, s.start_ms + tl.t_ms,
+                        meta={"wall_ms": tl.t_ms,
+                              "tokens": len(e.value.tokens),
+                              "buckets": tl.buckets()})
                 had_slot = s.client.slot is not None
                 s.client.release()
                 if s.prefill_rid is not None and not had_slot:
@@ -316,6 +370,9 @@ class SyneraServer:
         s.gen.close()
         s.state = DONE
         s.cancelled = True
+        if self.tracer.enabled and s.trace_uid >= 0:
+            self.tracer.stream_end(s.trace_uid, self.clock.now_ms,
+                                   meta={"cancelled": True})
         s.pending_call = None
         self._done_count += 1
         try:
@@ -421,6 +478,9 @@ class SyneraServer:
             s.client.on_event(ev)
             if kind == "prefill":
                 s.slots_used.append(ev.slot)
+                if self.tracer.enabled and s.trace_uid >= 0:
+                    self.tracer.stream_instant(s.trace_uid, "slot_assigned",
+                                               self.clock.now_ms, n=ev.slot)
                 if s.done:
                     # the stream finished before its prefill executed
                     # (cancellation raced the iteration): free the slot
@@ -429,9 +489,24 @@ class SyneraServer:
                     call, s.pending_call = s.pending_call, None
                     self._submit_verify(s, call)
             else:
-                cloud_ms = self.clock.now_ms - s.arrival_abs_ms
+                now = self.clock.now_ms
+                cloud_ms = now - s.arrival_abs_ms
+                cloud_parts = None
+                if self.tracer.enabled:
+                    # decompose the request's in-flight window for the
+                    # device coroutine's stall attribution, and stamp
+                    # the round trip on the stream's async track
+                    cloud_parts = self.tracer.window_parts(
+                        s.arrival_abs_ms, now, replica=self.replica,
+                        slot=ev.slot, vrid=ev.req_id,
+                        prefill_rid=s.prefill_rid)
+                    if s.trace_uid >= 0:
+                        self.tracer.stream_child(
+                            s.trace_uid, "verify_rt",
+                            min(s.trace_send_ms, now), now)
                 reply = CloudReply(result=ev.result, cloud_ms=cloud_ms,
-                                   fed_tokens=s.client.last_fed_tokens)
+                                   fed_tokens=s.client.last_fed_tokens,
+                                   cloud_parts=cloud_parts)
                 s.state = RUNNING
                 self._advance(s, reply)
         if (not events and not progressed
@@ -498,11 +573,32 @@ class SyneraServer:
         waiting = len(waiting_ids)
         ttfts = [s.ttft_ms for s in self.sessions if s.ttft_ms is not None]
         e2es = [s.e2e_ms for s in self.sessions if s.e2e_ms is not None]
+        tpots = [(s.e2e_ms - s.ttft_ms) / (s.n_emitted - 1)
+                 for s in self.sessions
+                 if s.ttft_ms is not None and s.e2e_ms is not None
+                 and s.n_emitted > 1]
+        # stall buckets: completed streams' timelines (each sums to its
+        # own t_ms, so the totals sum to stall_wall_ms by construction)
+        tls = [s.metrics.timeline for s in self.sessions
+               if s.done and not s.cancelled and s.metrics is not None]
 
         def pct(xs, q):
             return float(np.percentile(xs, q)) if xs else 0.0
 
         return ServerStats(
+            trace=self.tracer.enabled,
+            stall_wall_ms=sum(t.t_ms for t in tls),
+            stall_device_ms=sum(t.compute_ms for t in tls),
+            stall_cloud_ms=sum(t.cloud_ms for t in tls),
+            stall_link_ms=sum(t.link_ms for t in tls),
+            stall_queue_ms=sum(t.queue_ms for t in tls),
+            stall_batch_wait_ms=sum(t.batch_wait_ms for t in tls),
+            stall_swap_ms=sum(t.swap_ms for t in tls),
+            stall_preempted_ms=sum(t.preempted_ms for t in tls),
+            stall_other_ms=sum(t.other_ms for t in tls),
+            hist_ttft_ms=hist_from(ttfts),
+            hist_tpot_ms=hist_from(tpots),
+            hist_e2e_ms=hist_from(e2es),
             clock=("wall" if hasattr(self.clock, "modeled_ms") else "sim"),
             modeled_ms=getattr(self.clock, "modeled_ms", self.clock.now_ms),
             queue_depth=self.ext_queue_depth + len(self._fresh) + waiting,
@@ -574,7 +670,8 @@ def build_fleet(device: DeviceRuntime, engines, *, chunk: int = 32,
                 latency: CloudLatencyModel | None = None,
                 clock: SimClock | None = None,
                 preempt_policy: str | None = None,
-                clamp_arrivals: bool = False) -> list[SyneraServer]:
+                clamp_arrivals: bool = False,
+                tracer=None) -> list[SyneraServer]:
     """Compose one ``SyneraServer`` per engine on a single shared clock.
 
     Each replica is fully independent on the cloud side — its own block
@@ -588,8 +685,9 @@ def build_fleet(device: DeviceRuntime, engines, *, chunk: int = 32,
     return [SyneraServer(device, eng, chunk=chunk, sampling=sampling,
                          latency=latency, clock=clock,
                          preempt_policy=preempt_policy,
-                         clamp_arrivals=clamp_arrivals)
-            for eng in engines]
+                         clamp_arrivals=clamp_arrivals,
+                         tracer=tracer, replica=i)
+            for i, eng in enumerate(engines)]
 
 
 # how per-replica ServerStats fields combine into one fleet view: maxed
@@ -597,7 +695,7 @@ def build_fleet(device: DeviceRuntime, engines, *, chunk: int = 32,
 # flags), or taken from replica 0 (homogeneous config strings); every
 # other numeric field is a counter or gauge and sums
 _AGG_MAX = {"sim_ms", "modeled_ms", "max_verify_occupancy", "block_size"}
-_AGG_OR = {"swap", "share_prefix", "retain_prefix"}
+_AGG_OR = {"swap", "share_prefix", "retain_prefix", "trace"}
 _AGG_FIRST = {"clock", "preempt_policy", "route_policy"}
 
 
@@ -627,6 +725,8 @@ def aggregate_server_stats(per_replica: list[ServerStats], *,
             out[k] = any(vals)
         elif k in _AGG_MAX:
             out[k] = max(vals)
+        elif k.startswith("hist_"):
+            out[k] = hist_merge(vals)  # cumulative counts fold elementwise
         elif k.startswith("ttft_") or k.startswith("e2e_"):
             out[k] = 0.0
         else:

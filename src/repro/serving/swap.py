@@ -64,6 +64,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import model as M
+from repro.serving.trace import NULL_TRACER
 from repro.serving.engine import (BlockPoolExhausted, _CHAIN_ROOT,
                                   _call_donated)
 
@@ -171,6 +172,10 @@ class HostSwapManager:
         # stays live (retention) or is invalidated separately (release)
         self._peek = jax.jit(M.peek_cache_blocks)
         self._scatter = jax.jit(M.swap_in_blocks, donate_argnums=0)
+        # tracing handle (serving/trace.py): installed by the scheduler
+        # when tracing is on; NULL_TRACER keeps the guards free
+        self.tracer = NULL_TRACER
+        self.trace_replica = 0
         # telemetry (cumulative; pool_stats / ServerStats)
         self.swap_out_bytes = 0
         self.swap_in_bytes = 0
@@ -545,6 +550,9 @@ class HostSwapManager:
         self.host_adopted_blocks += len(entries)
         self.adopt_in_bytes += moved
         self._uncharged += moved
+        if self.tracer.enabled:
+            self.tracer.instant("host_adopt", replica=self.trace_replica,
+                                slot=slot, n=len(entries))
         return moved
 
     def demote_slot(self, slot: int) -> int:
@@ -596,5 +604,8 @@ class HostSwapManager:
         self.demoted_blocks += len(cand)
         moved = len(cand) * self.engine.block_bytes()
         self._uncharged += moved
+        if self.tracer.enabled:
+            self.tracer.instant("host_demote", replica=self.trace_replica,
+                                slot=slot, n=len(cand))
         self._enforce_host_cap()
         return moved

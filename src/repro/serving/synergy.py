@@ -163,7 +163,8 @@ def run_synera(device: DeviceRuntime, engine: CloudEngine,
                arrivals: list[float] | None = None,
                latency: CloudLatencyModel | None = None,
                preempt_policy: str | None = None,
-               slos: list | None = None) -> RunResult:
+               slos: list | None = None,
+               trace: bool = False) -> RunResult:
     """Serve ``prompts`` through the Synera pipeline.
 
     ``concurrency=1`` (default) runs streams strictly one after another
@@ -173,11 +174,18 @@ def run_synera(device: DeviceRuntime, engine: CloudEngine,
     pack chunks from multiple slots.  ``arrivals`` optionally gives each
     stream an absolute arrival offset (ms) on the shared clock;
     ``preempt_policy`` / ``slos`` select the eviction victim policy and
-    attach per-stream latency budgets (serving/swap.py).
+    attach per-stream latency budgets (serving/swap.py).  ``trace=True``
+    attaches a ``Tracer`` on the shared clock (``extras['tracer']``) —
+    token streams are byte-identical either way.
     """
+    from repro.serving.link import SimClock
     from repro.serving.server import SyneraServer
+    from repro.serving.trace import Tracer
+    clock = SimClock()
+    tracer = Tracer(clock) if trace else None
     server = SyneraServer(device, engine, chunk=chunk, sampling=sampling,
-                          latency=latency, preempt_policy=preempt_policy)
+                          latency=latency, preempt_policy=preempt_policy,
+                          clock=clock, tracer=tracer)
     metrics = server.serve(prompts, max_new, concurrency=concurrency,
                            arrivals=arrivals, profile_mode=profile_mode,
                            slos=slos)
@@ -186,6 +194,8 @@ def run_synera(device: DeviceRuntime, engine: CloudEngine,
         res.outputs.append(m.tokens)
         res.metrics.append(m)
     res.extras["scheduler"] = server.stats()
+    if tracer is not None:
+        res.extras["tracer"] = tracer
     return res.summarize(cost_model or CostModel())
 
 
@@ -200,7 +210,8 @@ def run_synera_fleet(device: DeviceRuntime, engines: list[CloudEngine],
                      arrivals: list[float] | None = None,
                      latency: CloudLatencyModel | None = None,
                      preempt_policy: str | None = None,
-                     slos: list | None = None) -> RunResult:
+                     slos: list | None = None,
+                     trace: bool = False) -> RunResult:
     """Serve ``prompts`` across a fleet of cloud replicas behind a
     ``ReplicaRouter`` (serving/router.py).
 
@@ -214,10 +225,15 @@ def run_synera_fleet(device: DeviceRuntime, engines: list[CloudEngine],
     generation instead of being rejected.  ``extras['scheduler']`` is
     the fleet-aggregated stats dict; ``extras['replicas']`` the
     per-replica views."""
+    from repro.serving.link import SimClock
     from repro.serving.router import ReplicaRouter
     from repro.serving.server import build_fleet
+    from repro.serving.trace import Tracer
+    clock = SimClock()
+    tracer = Tracer(clock) if trace else None
     servers = build_fleet(device, engines, chunk=chunk, sampling=sampling,
-                          latency=latency, preempt_policy=preempt_policy)
+                          latency=latency, preempt_policy=preempt_policy,
+                          clock=clock, tracer=tracer)
     router = ReplicaRouter(servers, policy=policy,
                            replica_queue_cap=replica_queue_cap)
     metrics = router.serve(prompts, max_new, concurrency=concurrency,
@@ -229,6 +245,8 @@ def run_synera_fleet(device: DeviceRuntime, engines: list[CloudEngine],
     res.extras["scheduler"] = router.stats()
     res.extras["replicas"] = [router.replica_stats(i)
                               for i in range(router.n_replicas)]
+    if tracer is not None:
+        res.extras["tracer"] = tracer
     return res.summarize(cost_model or CostModel())
 
 
@@ -289,7 +307,8 @@ def run_hybrid(device: DeviceRuntime, engine: CloudEngine, prompts, max_new,
                *, cost_model=None, chunk: int = 32,
                concurrency: int | None = 1,
                arrivals: list[float] | None = None,
-               preempt_policy: str | None = None) -> RunResult:
+               preempt_policy: str | None = None,
+               trace: bool = False) -> RunResult:
     """Hybrid [9]: SLM-LLM token-level offloading by *confidence only*
     (no importance, no PI, no early exit)."""
     from repro.core.offload import OffloadPolicy
@@ -301,7 +320,8 @@ def run_hybrid(device: DeviceRuntime, engine: CloudEngine, prompts, max_new,
         wire_vocab=device.wire_vocab)
     return run_synera(dev, engine, prompts, max_new, cost_model=cost_model,
                       chunk=chunk, concurrency=concurrency,
-                      arrivals=arrivals, preempt_policy=preempt_policy)
+                      arrivals=arrivals, preempt_policy=preempt_policy,
+                      trace=trace)
 
 
 def run_edgefm(device: DeviceRuntime, engine: CloudEngine, prompts, max_new,

@@ -1,0 +1,407 @@
+"""Unified tracing layer tests (serving/trace.py).
+
+Two families of invariants:
+
+* **Attribution** — every completed stream's exclusive stall buckets
+  sum exactly to its wall time (``bucket_sum == t_ms``), under plain
+  serving and under forced preemption + host swap + mid-run replica
+  death; ``Tracer.window_parts`` decomposes synthetic charge streams
+  into the documented categories.
+
+* **Passivity** — tracing must never change behavior: token streams
+  are byte-identical with tracing on or off (property-tested over a
+  shared-prefix + swap paged fleet), and the exported Chrome
+  trace-event JSON passes the structural checker shipped in
+  ``tools/check_trace.py``.
+"""
+import http.client
+import json
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+import jax
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.synera_pair import tiny_pair
+from repro.core.offload import OffloadPolicy
+from repro.models import model as M
+from repro.serving import synergy as SY
+from repro.serving.device import DeviceRuntime
+from repro.serving.engine import CloudEngine
+from repro.serving.gateway import protocol as P
+from repro.serving.link import SimClock, Timeline
+from repro.serving.router import ReplicaRouter
+from repro.serving.server import WAIT_CLOUD, build_fleet
+from repro.serving.trace import (NULL_TRACER, StreamTimeline, Tracer,
+                                 hist_add, hist_from, hist_merge, hist_new)
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "tools"))
+import check_trace  # noqa: E402  (tools/check_trace.py)
+
+
+# ---------------------------------------------------------------------------
+# Unit: StreamTimeline buckets
+# ---------------------------------------------------------------------------
+
+def _assert_sums(tl: StreamTimeline):
+    assert abs(tl.bucket_sum - tl.t_ms) <= 1e-9 * max(1.0, tl.t_ms)
+
+
+def test_timeline_is_link_alias():
+    # serving/link.py's Timeline moved into serving/trace.py
+    assert Timeline is StreamTimeline
+
+
+def test_advance_kinds_map_to_buckets():
+    tl = StreamTimeline()
+    tl.advance(3.0, "compute")
+    tl.advance(2.0, "comm")
+    tl.advance(5.0, "stall")    # untraced stall -> other
+    assert tl.compute_ms == 3.0 and tl.link_ms == 2.0
+    assert tl.other_ms == 5.0 and tl.stall_ms == 5.0
+    assert tl.t_ms == 10.0
+    _assert_sums(tl)
+
+
+def test_advance_stall_overlap_masks_front():
+    # round trip: uplink 4 | cloud 8 | downlink 3 = 15; PI overlap 5
+    # masks the front (all of uplink + 1ms of cloud); stall = 10 tail
+    tl = StreamTimeline()
+    tl.advance_stall(10.0, 4.0, [("cloud", 8.0)], 3.0, 5.0)
+    assert tl.cloud_ms == pytest.approx(7.0)
+    assert tl.link_ms == pytest.approx(3.0)
+    assert tl.other_ms == pytest.approx(0.0)
+    assert tl.t_ms == 10.0 and tl.stall_ms == 10.0
+    _assert_sums(tl)
+
+
+def test_advance_stall_without_parts_lands_in_other():
+    tl = StreamTimeline()
+    tl.advance_stall(7.5, 4.0, None, 3.0, 0.0)
+    assert tl.other_ms == 7.5
+    _assert_sums(tl)
+
+
+def test_advance_stall_mixed_window_parts():
+    # window contributed queue + other-stream wait + our cloud time
+    tl = StreamTimeline()
+    parts = [("queue", 2.0), ("wait", 3.0), ("cloud", 4.0)]
+    tl.advance_stall(10.0, 0.5, parts, 0.5, 0.0)
+    assert tl.link_ms == pytest.approx(1.0)
+    assert tl.queue_ms == pytest.approx(2.0)
+    assert tl.batch_wait_ms == pytest.approx(3.0)
+    assert tl.cloud_ms == pytest.approx(4.0)
+    _assert_sums(tl)
+
+
+def test_advance_stall_caps_at_stall_total():
+    # parts longer than the stall: buckets gain exactly stall_ms
+    tl = StreamTimeline()
+    tl.advance_stall(5.0, 0.0, [("cloud", 100.0)], 0.0, 0.0)
+    assert tl.cloud_ms == pytest.approx(5.0)
+    _assert_sums(tl)
+
+
+# ---------------------------------------------------------------------------
+# Unit: histogram helpers + Prometheus exposition
+# ---------------------------------------------------------------------------
+
+def test_hist_cumulative_semantics():
+    h = hist_from([7.0, 30.0, 99999.0])
+    # 7 <= 10, 25-bucket counts 7; all finite buckets cumulative
+    le = h["le"]
+    assert h["buckets"][le.index(5.0)] == 0
+    assert h["buckets"][le.index(10.0)] == 1
+    assert h["buckets"][le.index(50.0)] == 2
+    assert h["buckets"][-1] == 3 == h["count"]   # +Inf
+    assert h["sum"] == pytest.approx(7.0 + 30.0 + 99999.0)
+    m = hist_merge([h, hist_from([8.0])])
+    assert m["count"] == 4
+    assert m["buckets"][le.index(10.0)] == 2
+
+
+def test_metrics_text_renders_histograms():
+    stats = {"completed_streams": 3, "trace": True,
+             "hist_ttft_ms": hist_from([7.0, 600.0])}
+    text = P.metrics_text(stats)
+    assert "synera_completed_streams 3" in text
+    assert "synera_trace 1" in text
+    assert "# TYPE synera_ttft_ms histogram" in text
+    assert 'synera_ttft_ms_bucket{le="10"} 1' in text
+    assert 'synera_ttft_ms_bucket{le="1000"} 2' in text
+    assert 'synera_ttft_ms_bucket{le="+Inf"} 2' in text
+    assert "synera_ttft_ms_count 2" in text
+    assert "synera_ttft_ms_sum 607.0" in text
+
+
+# ---------------------------------------------------------------------------
+# Unit: window decomposition
+# ---------------------------------------------------------------------------
+
+def test_window_parts_categories():
+    tr = Tracer(SimClock())
+    tr.span(0.0, 10.0, "prefill", rids=(1,))          # our prompt prefill
+    tr.span(10.0, 20.0, "verify", rids=(2,))          # our verify (rewound)
+    tr.span(20.0, 30.0, "verify", rids=(3,))          # another stream
+    tr.span(30.0, 35.0, "swap_out", slot=0)           # our slot swapped
+    tr.instant("rewind", t=30.0, rids=(2,))           # we got preempted
+    tr.span(35.0, 45.0, "verify", rids=(2,))          # re-served after
+    parts = tr.window_parts(0.0, 45.0, slot=0, vrid=2, prefill_rid=1)
+    # serving spans that ended before the rewind were thrown away
+    assert parts == [("preempted", 20.0), ("wait", 10.0),
+                     ("swap", 5.0), ("cloud", 10.0)]
+    assert sum(d for _, d in parts) == pytest.approx(45.0)
+
+
+def test_window_parts_queue_before_own_prefill():
+    tr = Tracer(SimClock())
+    tr.span(0.0, 10.0, "verify", rids=(9,))     # other stream ahead of us
+    tr.span(10.0, 20.0, "prefill", rids=(1,))   # our prompt prefill
+    tr.span(20.0, 30.0, "verify", rids=(2,))
+    parts = tr.window_parts(0.0, 30.0, vrid=2, prefill_rid=1)
+    assert parts == [("queue", 10.0), ("cloud", 20.0)]
+
+
+def test_window_parts_uncovered_residual_is_other():
+    tr = Tracer(SimClock())
+    tr.span(0.0, 4.0, "verify", rids=(2,))
+    parts = tr.window_parts(0.0, 10.0, vrid=2)
+    assert parts == [("cloud", 4.0), ("other", 6.0)]
+
+
+def test_window_parts_respects_replica_tag():
+    tr = Tracer(SimClock())
+    tr.span(0.0, 10.0, "verify", replica=1, rids=(2,))
+    # same rid on another replica is someone else's request
+    parts = tr.window_parts(0.0, 10.0, replica=0, vrid=2)
+    assert parts == [("wait", 10.0)]
+
+
+def test_null_tracer_is_inert():
+    assert not NULL_TRACER and not NULL_TRACER.enabled
+    assert NULL_TRACER.stream_begin("s", 0.0) == -1
+    assert NULL_TRACER.window_parts(0.0, 1.0) is None
+    NULL_TRACER.span(0, 1, "x")
+    NULL_TRACER.instant("x")
+    with pytest.raises(RuntimeError):
+        NULL_TRACER.export("/tmp/never.json")
+
+
+# ---------------------------------------------------------------------------
+# Integration: serving runs
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def pair():
+    slm_cfg, llm_cfg = tiny_pair(vocab=64)
+    slm_p = M.init_params(slm_cfg, jax.random.PRNGKey(0))
+    llm_p = M.init_params(llm_cfg, jax.random.PRNGKey(1))
+    return slm_cfg, slm_p, llm_cfg, llm_p
+
+
+@pytest.fixture(scope="module")
+def dev(pair):
+    slm_cfg, slm_p, _, _ = pair
+    return DeviceRuntime(slm_cfg, slm_p, s_max=256, gamma=4, seed=0,
+                         policy=OffloadPolicy(mode="all"),
+                         use_early_exit=False, use_pi=False)
+
+
+def _mk_engine(pair, **kw):
+    _, _, llm_cfg, llm_p = pair
+    kw.setdefault("cache_impl", "paged")
+    kw.setdefault("block_size", 16)
+    kw.setdefault("share_prefix", True)
+    return CloudEngine(llm_cfg, llm_p, max_slots=2, s_max=256, **kw)
+
+
+def _prompts(n, length=8, shared=0, seed=5):
+    rng = np.random.default_rng(seed)
+    common = [int(t) for t in rng.integers(1, 60, 16)]
+    out = []
+    for i in range(n):
+        suffix = [int(t) for t in rng.integers(1, 60, length)]
+        out.append((common if i < shared else []) + suffix)
+    return out
+
+
+def _tokens(metrics):
+    return [[int(t) for t in m.tokens] for m in metrics]
+
+
+def test_traced_run_buckets_sum_and_byte_identity(dev, pair, tmp_path):
+    prompts = _prompts(4, shared=4, seed=3)
+    base = SY.run_synera(dev, _mk_engine(pair), prompts, 8, concurrency=4)
+    res = SY.run_synera(dev, _mk_engine(pair), prompts, 8, concurrency=4,
+                        trace=True)
+    assert res.outputs == base.outputs            # tracing is passive
+    for m in res.metrics:
+        _assert_sums(m.timeline)
+    sched = res.extras["scheduler"]
+    assert sched["trace"] is True
+    assert sched["stall_wall_ms"] == pytest.approx(
+        sum(m.timeline.t_ms for m in res.metrics))
+    assert sched["stall_wall_ms"] == pytest.approx(
+        sched["stall_device_ms"] + sched["stall_cloud_ms"]
+        + sched["stall_link_ms"] + sched["stall_queue_ms"]
+        + sched["stall_batch_wait_ms"] + sched["stall_swap_ms"]
+        + sched["stall_preempted_ms"] + sched["stall_other_ms"])
+    assert sched["hist_e2e_ms"]["count"] == len(prompts)
+    # exported trace passes the structural + bucket-sum checker
+    out = tmp_path / "trace.json"
+    res.extras["tracer"].export(str(out))
+    errors, summary = check_trace.check_file(str(out),
+                                             min_streams=len(prompts))
+    assert errors == [], errors
+    assert summary["buckets_checked"] == len(prompts)
+
+
+def test_untraced_stats_carry_no_stall_attribution(dev, pair):
+    res = SY.run_synera(dev, _mk_engine(pair), _prompts(2), 4,
+                        concurrency=2)
+    sched = res.extras["scheduler"]
+    assert sched["trace"] is False
+    # with tracing off the stall portion is unattributed by design
+    assert sched["stall_cloud_ms"] == 0.0
+    assert sched["stall_queue_ms"] == 0.0
+
+
+def test_fleet_pressure_buckets_sum(dev, pair):
+    """Preemption + host swap + mid-run replica kill: every surviving
+    stream's buckets still sum to its wall time, and the pressure
+    actually shows up in the swap/preempted/queue buckets."""
+    n, max_new = 6, 12
+    prompts = _prompts(n, length=12, seed=11)
+    engines = [_mk_engine(pair, block_size=4, pool_blocks=24, swap=True)
+               for _ in range(2)]
+    clock = SimClock()
+    tracer = Tracer(clock)
+    router = ReplicaRouter(
+        build_fleet(dev, engines, clock=clock, tracer=tracer),
+        policy="round-robin")
+    sess = [router.open_session(p, max_new) for p in prompts]
+    for _ in range(400):
+        router.step()
+        if any(s.state == WAIT_CLOUD
+               for s in router.replicas[0].sessions if not s.done):
+            break
+    else:
+        pytest.fail("replica 0 never reached a mid-verify state")
+    router.kill_replica(0)
+    while router.step():
+        pass
+    assert all(s.done for s in sess)
+    for s in sess:
+        _assert_sums(s.metrics.timeline)
+    stats = router.stats()
+    assert stats["dead_replicas"] == 1
+    assert stats["completed_streams"] == n
+    assert stats["stall_wall_ms"] == pytest.approx(
+        sum(s.metrics.timeline.t_ms for s in sess))
+    pressured = (stats["stall_swap_ms"] + stats["stall_preempted_ms"]
+                 + stats["stall_queue_ms"] + stats["stall_batch_wait_ms"])
+    assert pressured > 0.0
+    # the trace records the fleet events end-to-end
+    kinds = {k for _, k, *_ in tracer._instants}
+    assert "replica_kill" in kinds
+    # rerouted streams carry a per-stream "reroute" marker
+    snames = {nm for rec in tracer._streams.values()
+              for nm, _, _ in rec.instants}
+    assert "reroute" in snames
+
+
+def test_degraded_streams_fold_into_fleet_stats(dev, pair):
+    """Device-only degraded sessions belong to no replica; their
+    buckets and latency samples still land in the aggregate view."""
+    prompts = _prompts(3, seed=17)
+    res = SY.run_synera_fleet(dev, [_mk_engine(pair)], prompts, 6,
+                              policy="round-robin", replica_queue_cap=1,
+                              concurrency=3, trace=True)
+    sched = res.extras["scheduler"]
+    assert sched["degraded_streams"] >= 1
+    assert sched["completed_streams"] == len(prompts)
+    assert sched["hist_e2e_ms"]["count"] == len(prompts)
+    assert sched["stall_wall_ms"] == pytest.approx(
+        sum(m.timeline.t_ms for m in res.metrics))
+    for m in res.metrics:
+        _assert_sums(m.timeline)
+
+
+def _http(port, method, path, obj=None):
+    conn = http.client.HTTPConnection("127.0.0.1", port, timeout=180)
+    try:
+        body = json.dumps(obj) if obj is not None else None
+        conn.request(method, path, body,
+                     {"Content-Type": "application/json"} if body else {})
+        resp = conn.getresponse()
+        return resp.status, resp.read()
+    finally:
+        conn.close()
+
+
+def test_gateway_traces_endpoint_and_metrics_histograms(dev, pair):
+    """/v1/traces snapshots a Perfetto-loadable trace mid-flight and
+    /metrics exposes the tracer-fed latency histograms."""
+    from repro.serving.gateway import Gateway, GatewayConfig
+    from repro.serving.link import RealClock
+    from repro.serving.server import SyneraServer
+    eng = _mk_engine(pair)
+    clock = RealClock()
+    server = SyneraServer(dev, eng, clock=clock, clamp_arrivals=True,
+                          tracer=Tracer(clock))
+    gw = Gateway(server, GatewayConfig(port=0, max_new_default=4)).start()
+    try:
+        status, body = _http(gw.port, "POST", "/v1/chat/completions",
+                             {"messages": [{"role": "user",
+                                            "content": "3 17 42 9"}],
+                              "max_tokens": 4})
+        assert status == 200, body
+        status, body = _http(gw.port, "GET", "/v1/traces")
+        assert status == 200
+        doc = json.loads(body)
+        assert doc["enabled"] is True
+        errors, summary = check_trace.check_events(doc["traceEvents"])
+        assert errors == [], errors
+        assert summary["streams"] >= 1
+        assert summary["buckets_checked"] >= 1
+        status, body = _http(gw.port, "GET", "/metrics")
+        assert status == 200
+        text = body.decode()
+        assert "# TYPE synera_ttft_ms histogram" in text
+        assert 'synera_e2e_ms_bucket{le="+Inf"}' in text
+        assert "synera_stall_wall_ms" in text
+    finally:
+        gw.close()
+    # a gateway without --trace reports the endpoint as disabled
+    server2 = SyneraServer(dev, eng, clock=RealClock(),
+                           clamp_arrivals=True)
+    gw2 = Gateway(server2, GatewayConfig(port=0)).start()
+    try:
+        status, body = _http(gw2.port, "GET", "/v1/traces")
+        assert status == 200
+        assert json.loads(body)["enabled"] is False
+    finally:
+        gw2.close()
+
+
+@settings(max_examples=5, deadline=None)
+@given(st.integers(min_value=1, max_value=4),
+       st.integers(min_value=2, max_value=10),
+       st.integers(min_value=1, max_value=4))
+def test_tracing_byte_identity_property(dev, pair, n, max_new, conc):
+    """Tracing on/off never changes token streams, across stream
+    counts / lengths / concurrency on a shared-prefix + swap fleet."""
+    prompts = _prompts(n, shared=n, seed=100 + n + max_new)
+    kw = dict(block_size=4, pool_blocks=32, swap=True)
+    base = SY.run_synera_fleet(
+        dev, [_mk_engine(pair, **kw) for _ in range(2)], prompts, max_new,
+        policy="prefix-affinity", concurrency=conc)
+    traced = SY.run_synera_fleet(
+        dev, [_mk_engine(pair, **kw) for _ in range(2)], prompts, max_new,
+        policy="prefix-affinity", concurrency=conc, trace=True)
+    assert traced.outputs == base.outputs
+    for m in traced.metrics:
+        _assert_sums(m.timeline)

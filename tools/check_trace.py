@@ -1,0 +1,147 @@
+"""Validate a Perfetto/Chrome trace-event JSON file (serve.py
+--trace-out) and the stall-attribution invariant.
+
+Structural checks (Chrome trace-event format, JSON object flavor):
+
+* top level is an object with a ``traceEvents`` list;
+* every event has ``ph``/``pid``/``tid``/``name`` with sane types and a
+  non-negative ``ts`` (metadata events excepted);
+* complete events (``ph: X``) carry ``dur >= 0``;
+* nestable async events (``b``/``e``) balance per ``(pid, cat, id)``
+  with no ``e`` before its ``b`` and no track left open;
+* instants (``i``/``n``) carry a valid scope.
+
+Semantic check: every completed stream's closing ``e`` event carries
+``args.buckets`` (the exclusive stall decomposition) and ``args.wall_ms``;
+the buckets must sum to the wall time within ``1e-6 * max(1, wall)`` —
+the tracer's core invariant (docs/observability.md).
+
+  python tools/check_trace.py trace.json [--min-streams N]
+
+Exit 0 when valid; exit 1 with one line per problem otherwise.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+VALID_PH = {"B", "E", "X", "i", "I", "b", "e", "n", "M", "C", "s", "t",
+            "f"}
+
+
+def check_events(events) -> tuple[list[str], dict]:
+    """Return (errors, summary) for a traceEvents list."""
+    errors = []
+    open_async: dict = {}      # (pid, cat, id) -> depth
+    n_streams = n_checked = 0
+    for i, ev in enumerate(events):
+        where = f"traceEvents[{i}]"
+        if not isinstance(ev, dict):
+            errors.append(f"{where}: event is not an object")
+            continue
+        ph = ev.get("ph")
+        if ph not in VALID_PH:
+            errors.append(f"{where}: bad ph {ph!r}")
+            continue
+        if not isinstance(ev.get("name"), str):
+            errors.append(f"{where}: missing/non-string name")
+        for fld in ("pid", "tid"):
+            if not isinstance(ev.get(fld), int):
+                errors.append(f"{where}: missing/non-int {fld}")
+        if ph == "M":
+            continue               # metadata carries no timestamp
+        ts = ev.get("ts")
+        if not isinstance(ts, (int, float)) or ts < 0:
+            errors.append(f"{where}: bad ts {ts!r}")
+        if ph == "X":
+            dur = ev.get("dur")
+            if not isinstance(dur, (int, float)) or dur < 0:
+                errors.append(f"{where}: X event with bad dur {dur!r}")
+        elif ph in ("i", "I"):
+            if ev.get("s", "t") not in ("g", "p", "t"):
+                errors.append(f"{where}: instant with bad scope "
+                              f"{ev.get('s')!r}")
+        elif ph in ("b", "e", "n"):
+            if "id" not in ev:
+                errors.append(f"{where}: async event without id")
+                continue
+            key = (ev.get("pid"), ev.get("cat"), str(ev["id"]))
+            if ph == "b":
+                open_async[key] = open_async.get(key, 0) + 1
+            elif ph == "e":
+                depth = open_async.get(key, 0)
+                if depth <= 0:
+                    errors.append(f"{where}: 'e' with no open 'b' for "
+                                  f"{key}")
+                else:
+                    open_async[key] = depth - 1
+                # the outermost close of a stream track carries the
+                # stall decomposition
+                args = ev.get("args") or {}
+                if ev.get("cat") == "stream" and "buckets" in args:
+                    n_checked += 1
+                    wall = float(args.get("wall_ms", 0.0))
+                    total = sum(float(v)
+                                for v in args["buckets"].values())
+                    tol = 1e-6 * max(1.0, abs(wall))
+                    if abs(total - wall) > tol:
+                        errors.append(
+                            f"{where}: stream {ev.get('name')}: buckets "
+                            f"sum {total!r} != wall {wall!r} "
+                            f"(|diff|={abs(total - wall):.3e} > {tol:.0e})")
+    for key, depth in open_async.items():
+        if depth != 0:
+            errors.append(f"unbalanced async track {key}: "
+                          f"{depth} open 'b' events at EOF")
+    for ev in events:
+        if (isinstance(ev, dict) and ev.get("ph") == "b"
+                and ev.get("cat") == "stream"
+                and str(ev.get("name", "")).startswith(("stream-",
+                                                        "degraded-"))):
+            n_streams += 1
+    return errors, {"events": len(events), "streams": n_streams,
+                    "buckets_checked": n_checked}
+
+
+def check_file(path: str, min_streams: int = 0) -> tuple[list[str], dict]:
+    with open(path) as f:
+        doc = json.load(f)
+    if not isinstance(doc, dict) or not isinstance(
+            doc.get("traceEvents"), list):
+        return (["top level must be an object with a 'traceEvents' "
+                 "list"], {})
+    errors, summary = check_events(doc["traceEvents"])
+    if summary.get("streams", 0) < min_streams:
+        errors.append(f"expected >= {min_streams} stream tracks, found "
+                      f"{summary.get('streams', 0)}")
+    if min_streams > 0 and summary.get("buckets_checked", 0) == 0:
+        errors.append("no stream carried a bucket decomposition "
+                      "(args.buckets on its closing event)")
+    return errors, summary
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("trace", help="trace JSON file (serve.py --trace-out)")
+    ap.add_argument("--min-streams", type=int, default=1,
+                    help="fail unless at least N per-stream async "
+                         "tracks are present (0 disables)")
+    args = ap.parse_args()
+    try:
+        errors, summary = check_file(args.trace, args.min_streams)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"{args.trace}: unreadable: {e}", file=sys.stderr)
+        return 1
+    for e in errors:
+        print(f"{args.trace}: {e}", file=sys.stderr)
+    status = "FAIL" if errors else "ok"
+    print(f"{args.trace}: {status} ({summary.get('events', 0)} events, "
+          f"{summary.get('streams', 0)} streams, "
+          f"{summary.get('buckets_checked', 0)} bucket sums checked, "
+          f"{len(errors)} errors)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

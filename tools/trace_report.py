@@ -1,0 +1,93 @@
+"""Print the stall-attribution breakdown of a trace JSON file
+(serve.py --trace-out / gateway /v1/traces).
+
+Reads the per-stream bucket decomposition the tracer attaches to each
+stream's closing event (``args.buckets`` + ``args.wall_ms``, see
+docs/observability.md) and prints one row per completed stream plus an
+aggregate row with per-bucket shares of total wall time.
+
+  python tools/trace_report.py trace.json [--top N]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+BUCKETS = ("device", "cloud", "link", "queue", "batch_wait", "swap",
+           "preempted", "other")
+
+
+def stream_rows(doc: dict) -> list[dict]:
+    """Extract {name, wall_ms, tokens, <bucket>...} per ended stream."""
+    rows = []
+    for ev in doc.get("traceEvents", []):
+        if (not isinstance(ev, dict) or ev.get("ph") != "e"
+                or ev.get("cat") != "stream"):
+            continue
+        args = ev.get("args") or {}
+        if "buckets" not in args:
+            continue
+        row = {"name": ev.get("name", "?"),
+               "wall_ms": float(args.get("wall_ms", 0.0)),
+               "tokens": int(args.get("tokens", 0))}
+        for b in BUCKETS:
+            row[b] = float(args["buckets"].get(b, 0.0))
+        rows.append(row)
+    return rows
+
+
+def render(rows: list[dict], top: int = 0) -> str:
+    if not rows:
+        return "no completed streams with bucket decompositions found\n"
+    hdr = (["stream", "wall_ms", "tok"] + list(BUCKETS))
+    widths = [max(len(h), 10) for h in hdr]
+    widths[0] = max(len(r["name"]) for r in rows + [{"name": "TOTAL"}])
+    widths[0] = max(widths[0], len("stream"))
+    lines = ["  ".join(h.rjust(w) for h, w in zip(hdr, widths))]
+    body = sorted(rows, key=lambda r: -r["wall_ms"])
+    if top:
+        body = body[:top]
+    for r in body:
+        cells = [r["name"].rjust(widths[0]),
+                 f"{r['wall_ms']:.1f}".rjust(widths[1]),
+                 f"{r['tokens']}".rjust(widths[2])]
+        cells += [f"{r[b]:.1f}".rjust(w)
+                  for b, w in zip(BUCKETS, widths[3:])]
+        lines.append("  ".join(cells))
+    total_wall = sum(r["wall_ms"] for r in rows)
+    totals = {b: sum(r[b] for r in rows) for b in BUCKETS}
+    cells = ["TOTAL".rjust(widths[0]),
+             f"{total_wall:.1f}".rjust(widths[1]),
+             f"{sum(r['tokens'] for r in rows)}".rjust(widths[2])]
+    cells += [f"{totals[b]:.1f}".rjust(w)
+              for b, w in zip(BUCKETS, widths[3:])]
+    lines.append("  ".join(cells))
+    if total_wall > 0:
+        cells = ["share".rjust(widths[0]), "".rjust(widths[1]),
+                 "".rjust(widths[2])]
+        cells += [f"{100.0 * totals[b] / total_wall:.1f}%".rjust(w)
+                  for b, w in zip(BUCKETS, widths[3:])]
+        lines.append("  ".join(cells))
+    return "\n".join(lines) + "\n"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("trace", help="trace JSON file (serve.py --trace-out)")
+    ap.add_argument("--top", type=int, default=0,
+                    help="print only the N slowest streams (0 = all)")
+    args = ap.parse_args()
+    try:
+        with open(args.trace) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"{args.trace}: unreadable: {e}", file=sys.stderr)
+        return 1
+    rows = stream_rows(doc)
+    sys.stdout.write(render(rows, top=args.top))
+    return 0 if rows else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())
